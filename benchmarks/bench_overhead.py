@@ -1,0 +1,91 @@
+"""§V-F: decision latency (paper bar: < 2 s on a 2 GHz laptop CPU; HPC
+schedulers must respond within 15-30 s) + the DFP-step §Perf hillclimb
+measurements (H3) — this is the paper's own compute, measured wall-clock.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import AgentConfig, MRSchAgent
+from repro.core.agent import _train_step, _values
+from repro.sim import Cluster, ResourceSpec
+from repro.sim.simulator import SchedContext
+from repro.sim.job import Job
+from repro.workloads import THETA_BB_UNITS, THETA_NODES
+
+from .common import save_json
+
+
+def _theta_ctx(n_jobs: int = 10):
+    c = Cluster([ResourceSpec("node", THETA_NODES),
+                 ResourceSpec("bb", THETA_BB_UNITS)])
+    window = [Job(i, 0.0, 3600.0, 7200.0, {"node": 128 * (i + 1), "bb": i})
+              for i in range(n_jobs)]
+    return SchedContext(now=100.0, cluster=c, window=window,
+                        queue_len=n_jobs, running=[], queue=window)
+
+
+def run(quick: bool = True, seed: int = 0):
+    out = {}
+    # Full paper-scale agent: 11410 -> 4000 -> 1000 -> 512.
+    agent = MRSchAgent(
+        [ResourceSpec("node", THETA_NODES), ResourceSpec("bb", THETA_BB_UNITS)],
+        AgentConfig(seed=seed))
+    ctx = _theta_ctx()
+
+    # --- decision latency (encode + forward + argmax), incl. warmup split
+    t0 = time.time()
+    agent.select(ctx)
+    out["first_decision_s"] = time.time() - t0           # includes jit compile
+    reps = 10 if quick else 50
+    t0 = time.time()
+    for _ in range(reps):
+        agent.select(ctx)
+    per = (time.time() - t0) / reps
+    out["decision_latency_s"] = per
+    out["paper_bar_s"] = 2.0
+    out["meets_paper_bar"] = bool(per < 2.0)
+
+    # --- H3 iteration log: state-encoding vs network forward split
+    from repro.core.encoding import encode_state
+    t0 = time.time()
+    for _ in range(reps):
+        encode_state(agent.enc, ctx)
+    out["encode_s"] = (time.time() - t0) / reps
+    s = jnp.asarray(encode_state(agent.enc, ctx))
+    m = jnp.zeros((2,), jnp.float32)
+    g = jnp.full((2,), 0.5, jnp.float32)
+    mask = jnp.ones((10,), bool)
+    _values(agent.params, agent.dfp, s, m, g, mask).block_until_ready()
+    t0 = time.time()
+    for _ in range(reps):
+        _values(agent.params, agent.dfp, s, m, g, mask).block_until_ready()
+    out["forward_s"] = (time.time() - t0) / reps
+
+    # --- training step latency (batched replay update)
+    batch = {
+        "state": jnp.asarray(np.random.randn(64, agent.enc.state_dim),
+                             jnp.float32),
+        "meas": jnp.zeros((64, 2)), "goal": jnp.full((64, 2), 0.5),
+        "action": jnp.zeros((64,), jnp.int32),
+        "target": jnp.zeros((64, 6, 2)), "target_mask": jnp.ones((64, 6)),
+    }
+    p, o = agent.params, agent.opt_state
+    p, o, _ = _train_step(agent.dfp, p, o, batch, 1e-4, 10.0)  # compile
+    t0 = time.time()
+    for _ in range(5):
+        p, o, loss = _train_step(agent.dfp, p, o, batch, 1e-4, 10.0)
+    jax.block_until_ready(loss)
+    out["train_step_s"] = (time.time() - t0) / 5
+    save_json("overhead", out)
+    return out
+
+
+if __name__ == "__main__":
+    o = run()
+    print({k: (round(v, 4) if isinstance(v, float) else v)
+           for k, v in o.items()})

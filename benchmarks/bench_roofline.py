@@ -1,0 +1,91 @@
+"""Deliverable (g): roofline table from the dry-run artifacts.
+
+Reads results/dryrun/*.json (written by repro.launch.dryrun) and emits the
+EXPERIMENTS.md §Roofline table: three terms per (arch x shape), dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPS ratio, and baseline->optimized deltas.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+DRYRUN = os.environ.get("REPRO_RESULTS", "results/dryrun")
+
+
+def load_cells() -> Dict[str, dict]:
+    out = {}
+    for path in sorted(glob.glob(os.path.join(DRYRUN, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        out[os.path.basename(path)[:-5]] = rec
+    return out
+
+
+def table(mesh: str = "single", tag: str = "") -> List[dict]:
+    rows = []
+    for cell, rec in load_cells().items():
+        parts = cell.split("__")
+        if parts[2] != mesh or len(parts) > 4:
+            continue
+        cell_tag = parts[3] if len(parts) > 3 else ""
+        if cell_tag != tag:
+            continue
+        row = {"arch": rec["arch"], "shape": rec["shape"],
+               "status": rec["status"]}
+        if rec["status"] == "ok" and "roofline" in rec:
+            r = rec["roofline"]
+            row.update(
+                compute_s=r["compute_s"], memory_s=r["memory_s"],
+                collective_s=r["collective_s"], dominant=r["dominant"],
+                frac=r["roofline_fraction"],
+                useful_ratio=rec.get("useful_ratio"),
+                mem_gb=rec["mem"]["total_hbm_gb"],
+            )
+        elif rec["status"] == "skipped":
+            row["reason"] = rec.get("reason", "")[:60]
+        rows.append(row)
+    return rows
+
+
+def markdown(rows: List[dict]) -> str:
+    hdr = ("| arch | shape | compute s | memory s | collective s | dominant "
+           "| frac | useful | mem GB/dev |")
+    sep = "|" + "---|" * 9
+    lines = [hdr, sep]
+    for r in sorted(rows, key=lambda x: (x["arch"], x["shape"])):
+        if r["status"] == "ok" and "frac" in r:
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3g} "
+                f"| {r['memory_s']:.3g} | {r['collective_s']:.3g} "
+                f"| {r['dominant']} | {r['frac']:.2f} "
+                f"| {r.get('useful_ratio') or 0:.2f} | {r['mem_gb']:.1f} |")
+        else:
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — "
+                         f"| {r['status']} | — | — | — |")
+    return "\n".join(lines)
+
+
+def run(quick: bool = True):
+    base = table("single", "")
+    opt = table("single", "opt") + table("single", "serve")
+    out = {"baseline": base, "optimized": opt}
+    n_ok = sum(1 for r in base if r["status"] == "ok")
+    out["summary"] = {
+        "baseline_cells_ok": n_ok,
+        "baseline_cells_skipped": sum(1 for r in base
+                                      if r["status"] == "skipped"),
+        "mean_frac_baseline": (sum(r.get("frac", 0) for r in base
+                                   if r["status"] == "ok") / max(n_ok, 1)),
+    }
+    from .common import save_json
+    save_json("roofline", out)
+    return out
+
+
+if __name__ == "__main__":
+    print(markdown(table("single", "")))
+    print()
+    print("### optimized")
+    print(markdown(table("single", "opt") + table("single", "serve")))

@@ -1,0 +1,31 @@
+"""Fig. 3: MLP vs CNN state module ablation."""
+from __future__ import annotations
+
+from repro.core import evaluate
+from repro.workloads import build_curriculum, build_scenarios
+
+from .common import kiviat_scores, metric_row, mini_setup, save_json, train_mrsch
+
+
+def run(quick: bool = True, seed: int = 0):
+    cfg, res = mini_setup(seed=seed)
+    train_cfg, _ = mini_setup(seed=seed + 1, duration_days=3.0)
+    trace = build_scenarios(train_cfg, names=("S2",))["S2"]
+    cur = build_curriculum(train_cfg, trace, n_sampled=3, n_real=1, n_synth=2,
+                           jobs_per_set=260, seed=seed)
+    sets = cur.ordered("sampled_real_synthetic")
+    eval_jobs = build_scenarios(cfg, names=("S2",), seed=seed + 7)["S2"]
+
+    rows = []
+    for module in ("mlp", "cnn"):
+        agent = train_mrsch(res, sets, quick=quick, state_module=module)
+        r = evaluate(agent, res, eval_jobs)
+        rows.append(metric_row(module.upper(), r))
+    out = {"rows": rows, "kiviat": kiviat_scores(rows)}
+    save_json("state_module", out)
+    return out
+
+
+if __name__ == "__main__":
+    o = run()
+    print(o["kiviat"])

@@ -1,0 +1,91 @@
+"""Shared benchmark scaffolding (CPU-sized defaults; --full for bigger)."""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+from repro.core import (AgentConfig, FCFSPolicy, GAConfig, GAOptimizer,
+                        MRSchAgent, ScalarRLConfig, ScalarRLPolicy, evaluate,
+                        train_agent)
+from repro.workloads import ThetaConfig, build_curriculum, build_scenarios, generate_trace
+
+RESULTS = os.environ.get("REPRO_BENCH_RESULTS", "results/bench")
+
+
+def mini_setup(seed: int = 0, duration_days: float = 2.0,
+               jobs_per_day: float = 260.0):
+    cfg = ThetaConfig.mini(seed=seed, duration_days=duration_days,
+                           jobs_per_day=jobs_per_day)
+    return cfg, cfg.resources()
+
+
+def agent_config(quick: bool = True) -> AgentConfig:
+    """CPU-sized agent: same architecture family as the paper's (§IV-C),
+    scaled to the mini cluster encoding."""
+    return AgentConfig(
+        state_hidden=(1024, 256) if quick else (4000, 1000),
+        state_out=128 if quick else 512,
+        module_hidden=64 if quick else 128,
+        batch_size=64, grad_steps_per_episode=72,
+        eps_decay=0.75, seed=0)
+
+
+def train_mrsch(resources, jobsets, quick: bool = True,
+                state_module: str = "mlp") -> MRSchAgent:
+    from dataclasses import replace
+    cfg = replace(agent_config(quick), state_module=state_module)
+    agent = MRSchAgent(resources, cfg)
+    train_agent(agent, resources, jobsets)
+    return agent
+
+
+def train_scalar_rl(resources, jobsets) -> ScalarRLPolicy:
+    pol = ScalarRLPolicy(resources, ScalarRLConfig(hidden=(512, 128)))
+    pol.training = True
+    from repro.sim import run_trace
+    for js in jobsets:
+        run_trace(resources, js, pol)
+        pol.end_episode()
+    pol.training = False
+    return pol
+
+
+def metric_row(name: str, result) -> Dict[str, float]:
+    row = result.metrics.as_row()
+    return {"method": name, **{k: round(v, 4) for k, v in row.items()}}
+
+
+def kiviat_scores(rows: List[Dict]) -> Dict[str, float]:
+    """Normalized overall score (Fig. 7 area proxy): mean over
+    [util_node, util_bb(, util_power), 1/wait, 1/slowdown], each scaled so
+    the best method = 1."""
+    axes = [k for k in rows[0] if k.startswith("util_")]
+    vals = {}
+    for r in rows:
+        v = [r[a] for a in axes]
+        v.append(1.0 / max(r["avg_wait"], 1e-9))
+        v.append(1.0 / max(r["avg_slowdown"], 1e-9))
+        vals[r["method"]] = np.array(v)
+    stack = np.stack(list(vals.values()))
+    best = stack.max(axis=0) + 1e-12
+    return {m: float((v / best).mean()) for m, v in vals.items()}
+
+
+def save_json(name: str, obj) -> str:
+    os.makedirs(RESULTS, exist_ok=True)
+    path = os.path.join(RESULTS, name + ".json")
+    with open(path, "w") as f:
+        json.dump(obj, f, indent=1, default=float)
+    return path
+
+
+class Timer:
+    def __init__(self):
+        self.t0 = time.time()
+
+    def us(self, calls: int = 1) -> float:
+        return (time.time() - self.t0) * 1e6 / max(calls, 1)

@@ -1,0 +1,91 @@
+"""Benchmark harness: one entry per paper table/figure + framework perf.
+
+Prints ``name,us_per_call,derived`` CSV rows.  ``--full`` scales up the
+trace sizes; default sizing finishes on a single CPU core.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def _run(name, fn, **kw):
+    t0 = time.time()
+    try:
+        out = fn(**kw)
+        dt = time.time() - t0
+        return name, dt, out, None
+    except Exception as e:
+        traceback.print_exc()
+        return name, time.time() - t0, None, f"{type(e).__name__}: {e}"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated bench names")
+    args = ap.parse_args()
+    quick = not args.full
+
+    from . import (bench_curriculum, bench_goal_adaptation, bench_overhead,
+                   bench_roofline, bench_scheduling, bench_state_module,
+                   bench_three_resource)
+
+    benches = {
+        "overhead_vF": lambda: bench_overhead.run(quick=quick),
+        "roofline_g": lambda: bench_roofline.run(quick=quick),
+        "state_module_fig3": lambda: bench_state_module.run(quick=quick),
+        "curriculum_fig4": lambda: bench_curriculum.run(quick=quick),
+        "scheduling_fig5_6_7": lambda: bench_scheduling.run(quick=quick),
+        "goal_adaptation_fig8_9": lambda: bench_goal_adaptation.run(quick=quick),
+        "three_resource_fig10": lambda: bench_three_resource.run(quick=quick),
+    }
+    if args.only:
+        keep = set(args.only.split(","))
+        benches = {k: v for k, v in benches.items() if k in keep}
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in benches.items():
+        bname, dt, out, err = _run(name, fn)
+        if err:
+            failures += 1
+            print(f"{bname},{dt * 1e6:.0f},ERROR:{err}")
+            continue
+        derived = ""
+        if name == "overhead_vF":
+            derived = (f"decision={out['decision_latency_s'] * 1e3:.1f}ms;"
+                       f"bar2s={'PASS' if out['meets_paper_bar'] else 'FAIL'}")
+        elif name == "roofline_g":
+            s = out["summary"]
+            derived = (f"cells_ok={s['baseline_cells_ok']};"
+                       f"skipped={s['baseline_cells_skipped']}")
+        elif name == "scheduling_fig5_6_7":
+            ks = {n: d["kiviat"] for n, d in out["scenarios"].items()}
+            wins = sum(1 for k in ks.values()
+                       if max(k, key=k.get) == "MRSch")
+            derived = f"MRSch_best_in={wins}/{len(ks)}"
+        elif name == "state_module_fig3":
+            k = out["kiviat"]
+            derived = f"MLP={k.get('MLP', 0):.3f};CNN={k.get('CNN', 0):.3f}"
+        elif name == "curriculum_fig4":
+            fl = {k: v["final_loss"] for k, v in out.items()}
+            best = min((v, k) for k, v in fl.items() if v is not None)[1]
+            derived = f"best_order={best}"
+        elif name == "goal_adaptation_fig8_9":
+            derived = (f"rBB_S1={out['S1']['mean']:.3f};"
+                       f"rBB_S5={out['S5']['mean']:.3f}")
+        elif name == "three_resource_fig10":
+            wins = sum(1 for d in out.values()
+                       if max(d["kiviat"], key=d["kiviat"].get) == "MRSch")
+            derived = f"MRSch_best_in={wins}/{len(out)}"
+        print(f"{bname},{dt * 1e6:.0f},{derived}", flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Quickstart: train a small MRSch agent and compare it against FCFS.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Runs in a few minutes on one CPU core (mini Theta-like cluster: 256 nodes,
+80 burst-buffer units).
+"""
+import time
+
+from repro.core import AgentConfig, FCFSPolicy, MRSchAgent, evaluate, train_agent
+from repro.sim import run_trace
+from repro.workloads import ThetaConfig, build_scenarios, sampled_jobsets
+
+
+def main():
+    cfg = ThetaConfig.mini(seed=0, duration_days=1.5, jobs_per_day=240)
+    res = cfg.resources()
+    trace = build_scenarios(cfg, names=("S4",))["S4"]   # heavy BB contention
+
+    agent = MRSchAgent(res, AgentConfig(
+        state_hidden=(512, 128), state_out=64, module_hidden=32,
+        grad_steps_per_episode=16, batch_size=32, eps_decay=0.9))
+
+    t0 = time.time()
+    train_agent(agent, res, sampled_jobsets(trace, 4, 200, seed=1))
+    print(f"trained in {time.time() - t0:.0f}s "
+          f"(replay rows: {agent.replay.rows}, eps: {agent.epsilon:.2f})")
+
+    for name, policy in [("FCFS", FCFSPolicy()), ("MRSch", agent)]:
+        r = evaluate(policy, res, trace)
+        m = r.metrics
+        print(f"{name:6s} node_util={m.utilization['node']:.3f} "
+              f"bb_util={m.utilization['bb']:.3f} "
+              f"wait={m.avg_wait / 60:.1f}min slowdown={m.avg_slowdown:.2f}")
+
+
+if __name__ == "__main__":
+    main()

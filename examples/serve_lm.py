@@ -1,0 +1,38 @@
+"""Serve a reduced LM with batched greedy decoding (KV/MLA/SSM caches).
+
+    PYTHONPATH=src python examples/serve_lm.py --arch mamba2-1.3b
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_NAMES, smoke_config
+from repro.launch.serve import generate
+from repro.models import transformer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma-2b", choices=ARCH_NAMES)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new-tokens", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = smoke_config(args.arch)
+    if cfg.input_mode == "embeddings":
+        print(f"{args.arch} uses a stubbed modality frontend; serving demo "
+              f"uses token mode archs — switching to gemma-2b")
+        cfg = smoke_config("gemma-2b")
+    params = transformer.init_params(jax.random.PRNGKey(0), cfg, jnp.float32)
+    prompts = jax.random.randint(jax.random.PRNGKey(1),
+                                 (args.batch, args.prompt_len), 0,
+                                 cfg.vocab_size)
+    out = generate(cfg, params, prompts, max_new_tokens=args.new_tokens)
+    print("generated:", out["tokens"].shape,
+          f"decode throughput {out['decode_tps']:.1f} tok/s (CPU)")
+
+
+if __name__ == "__main__":
+    main()

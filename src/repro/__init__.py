@@ -1,0 +1,3 @@
+"""repro: MRSch (multi-resource HPC scheduling via Direct Future Prediction)
+rebuilt as a production-grade multi-pod JAX framework."""
+__version__ = "1.0.0"

@@ -1,0 +1,2 @@
+from .store import (CheckpointManager, latest_step, restore_pytree,
+                    save_pytree)

@@ -1,0 +1,16 @@
+"""The paper's primary contribution: the MRSch DFP scheduling agent."""
+from .agent import AgentConfig, MRSchAgent
+from .dfp import DFPConfig, action_values, greedy_action, init_params, loss_fn, predict
+from .encoding import EncodingConfig, encode_measurement, encode_state, encoding_for
+from .goal import goal_vector
+from .policies import FCFSPolicy, GAConfig, GAOptimizer, ScalarRLConfig, ScalarRLPolicy
+from .replay import Episode, EpisodeRecorder, ReplayBuffer
+from .train import TrainLog, evaluate, train_agent
+
+__all__ = [
+    "AgentConfig", "MRSchAgent", "DFPConfig", "action_values", "greedy_action",
+    "init_params", "loss_fn", "predict", "EncodingConfig", "encode_measurement",
+    "encode_state", "encoding_for", "goal_vector", "FCFSPolicy", "GAConfig",
+    "GAOptimizer", "ScalarRLConfig", "ScalarRLPolicy", "Episode",
+    "EpisodeRecorder", "ReplayBuffer", "TrainLog", "evaluate", "train_agent",
+]

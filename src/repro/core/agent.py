@@ -1,0 +1,149 @@
+"""The MRSch scheduling agent (paper §III).
+
+Wraps the DFP network with: vector state encoding, the Eq. (1) dynamic goal
+vector, epsilon-greedy exploration, the episodic replay buffer, and Adam
+training on the future-measurement MSE loss.  Implements the simulator's
+``SchedulingPolicy`` protocol, so the identical object drives the paper
+reproduction benches and the fleet scheduler in ``repro.launch.scheduler``.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field, replace
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..nn.optim import AdamState, adam_init, adam_update
+from ..sim.cluster import ResourceSpec
+from ..sim.simulator import SchedContext
+from .dfp import DFPConfig, action_values, init_params, loss_fn
+from .encoding import EncodingConfig, encode_measurement, encode_state
+from .goal import goal_vector
+from .replay import EpisodeRecorder, ReplayBuffer
+
+
+@dataclass(frozen=True)
+class AgentConfig:
+    window: int = 10
+    offsets: Tuple[int, ...] = (1, 2, 4, 8, 16, 32)
+    temporal_weights: Tuple[float, ...] = (0.0, 0.0, 0.0, 0.5, 0.5, 1.0)
+    lr: float = 1e-4
+    batch_size: int = 64
+    grad_steps_per_episode: int = 64
+    buffer_rows: int = 200_000
+    eps_start: float = 1.0
+    eps_decay: float = 0.995          # paper §IV-C: alpha = 0.995
+    eps_min: float = 0.02
+    state_module: str = "mlp"         # "mlp" | "cnn"
+    state_hidden: Tuple[int, ...] = (4000, 1000)
+    state_out: int = 512
+    module_hidden: int = 128
+    seed: int = 0
+    grad_clip: float = 10.0
+
+
+@functools.partial(jax.jit, static_argnums=(0,), donate_argnums=(1, 2))
+def _train_step(cfg: DFPConfig, params, opt_state, batch, lr, grad_clip):
+    loss, grads = jax.value_and_grad(loss_fn)(params, cfg, batch)
+    params, opt_state = adam_update(grads, opt_state, params, lr=lr,
+                                    grad_clip=grad_clip)
+    return params, opt_state, loss
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def _values(params, cfg: DFPConfig, state, meas, goal, valid_mask):
+    u = action_values(params, cfg, state[None], meas[None], goal[None])[0]
+    return jnp.where(valid_mask, u, -jnp.inf)
+
+
+class MRSchAgent:
+    """DFP-based multi-resource scheduling agent."""
+
+    def __init__(self, resources: Sequence[ResourceSpec],
+                 config: AgentConfig = AgentConfig()):
+        self.resources = list(resources)
+        self.config = config
+        names = tuple(r.name for r in self.resources)
+        caps = tuple(r.capacity for r in self.resources)
+        self.enc = EncodingConfig(window=config.window, resource_names=names,
+                                  capacities=caps)
+        self.dfp = DFPConfig(
+            state_dim=self.enc.state_dim,
+            n_measurements=len(names),
+            n_actions=config.window,
+            offsets=config.offsets,
+            temporal_weights=config.temporal_weights,
+            state_module=config.state_module,
+            state_hidden=config.state_hidden,
+            state_out=config.state_out,
+            module_hidden=config.module_hidden,
+        )
+        key = jax.random.PRNGKey(config.seed)
+        self.params = init_params(key, self.dfp)
+        self.opt_state = adam_init(self.params)
+        self.replay = ReplayBuffer(config.offsets, config.buffer_rows)
+        self.recorder = EpisodeRecorder()
+        self.rng = np.random.default_rng(config.seed)
+        self.epsilon = config.eps_start
+        self.training = False
+        self.losses: List[float] = []
+        self.goal_log: List[np.ndarray] = []
+
+    # ---------------------------------------------------------------- policy
+    def select(self, ctx: SchedContext) -> int:
+        state = encode_state(self.enc, ctx)
+        meas = encode_measurement(self.enc, ctx)
+        goal = goal_vector(ctx, self.enc.resource_names, self.enc.capacities)
+        self.goal_log.append(goal)
+        n_valid = min(len(ctx.window), self.config.window)
+        if self.training and self.rng.uniform() < self.epsilon:
+            action = int(self.rng.integers(0, n_valid))
+        else:
+            mask = np.zeros(self.config.window, bool)
+            mask[:n_valid] = True
+            u = _values(self.params, self.dfp, jnp.asarray(state),
+                        jnp.asarray(meas), jnp.asarray(goal),
+                        jnp.asarray(mask))
+            action = int(np.argmax(np.asarray(u)))
+        if self.training:
+            self.recorder.record(state, meas, goal, action)
+        return action
+
+    # ---------------------------------------------------------------- train
+    def end_episode(self) -> Optional[float]:
+        """Flush the recorded episode, run gradient steps, decay epsilon."""
+        ep = self.recorder.finish()
+        if ep is not None:
+            self.replay.add(ep)
+        if not self.training or self.replay.rows < self.config.batch_size:
+            return None
+        total = 0.0
+        for _ in range(self.config.grad_steps_per_episode):
+            batch = self.replay.sample(self.rng, self.config.batch_size)
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            self.params, self.opt_state, loss = _train_step(
+                self.dfp, self.params, self.opt_state, batch,
+                self.config.lr, self.config.grad_clip)
+            total += float(loss)
+        mean_loss = total / self.config.grad_steps_per_episode
+        self.losses.append(mean_loss)
+        self.epsilon = max(self.config.eps_min,
+                           self.epsilon * self.config.eps_decay)
+        return mean_loss
+
+    # ---------------------------------------------------------------- io
+    def save(self, path: str) -> None:
+        flat, treedef = jax.tree_util.tree_flatten(self.params)
+        np.savez(path, n=len(flat), epsilon=self.epsilon,
+                 **{f"p{i}": np.asarray(x) for i, x in enumerate(flat)})
+
+    def load(self, path: str) -> None:
+        data = np.load(path)
+        flat = [jnp.asarray(data[f"p{i}"]) for i in range(int(data["n"]))]
+        treedef = jax.tree_util.tree_structure(self.params)
+        self.params = jax.tree_util.tree_unflatten(treedef, flat)
+        self.epsilon = float(data["epsilon"])
+        self.opt_state = adam_init(self.params)

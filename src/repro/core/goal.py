@@ -1,0 +1,40 @@
+"""Dynamic resource prioritizing (paper §III-B, Eq. 1).
+
+    r_j = sum_i P_ij * t_i / sum_j sum_i P_ij * t_i
+
+summed over ALL jobs in the system — queued jobs (t_i = user walltime
+estimate) and running jobs (t_i = remaining walltime estimate).  r_j is the
+normalized ideal completion time of resource j's outstanding demand: the
+fiercer the contention for a resource, the larger its goal weight.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+from ..sim.simulator import SchedContext
+
+
+def goal_vector(ctx: SchedContext, resource_names: Sequence[str],
+                capacities: Sequence[int]) -> np.ndarray:
+    caps = np.maximum(np.asarray(capacities, dtype=np.float64), 1.0)
+    R = len(resource_names)
+    demand_time = np.zeros(R, dtype=np.float64)
+
+    # Queued jobs (full queue, not just the window): user walltime estimate.
+    queued = ctx.queue if ctx.queue is not None else ctx.window
+    for job in queued:
+        p = np.array([job.demands.get(n, 0) for n in resource_names]) / caps
+        demand_time += p * job.walltime
+
+    # Running jobs: remaining estimated time.
+    for rj in ctx.cluster.running_jobs():
+        rem = max(rj.est_end - ctx.now, 0.0)
+        p = np.array([rj.job.demands.get(n, 0) for n in resource_names]) / caps
+        demand_time += p * rem
+
+    total = demand_time.sum()
+    if total <= 0:
+        return np.full(R, 1.0 / R, dtype=np.float32)
+    return (demand_time / total).astype(np.float32)

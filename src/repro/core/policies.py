@@ -1,0 +1,253 @@
+"""Comparison scheduling policies (paper §IV-D).
+
+* FCFS        — list-scheduling extension of first-come-first-serve to
+                multi-resource; always selects the head of the window.
+* GAOptimizer — multi-objective optimization over the window solved with a
+                genetic algorithm (NSGA-II-style non-dominated sorting),
+                after Fan et al. "Scheduling Beyond CPUs" [13].
+* ScalarRL    — policy-gradient RL with a *fixed-weight* scalar reward
+                (0.5 * util_A + 0.5 * util_B ...), the paper's single-
+                objective RL strawman.
+
+All policies run under the same simulator machinery (window, reservation,
+EASY backfilling), so differences come from the selection rule alone.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..nn.modules import mlp_apply, mlp_init
+from ..nn.optim import adam_init, adam_update
+from ..sim.cluster import ResourceSpec
+from ..sim.simulator import SchedContext
+from .encoding import EncodingConfig, encode_measurement, encode_state
+
+
+class FCFSPolicy:
+    """Head-of-queue list scheduling."""
+
+    def select(self, ctx: SchedContext) -> int:
+        return 0
+
+
+# --------------------------------------------------------------------- GA
+@dataclass(frozen=True)
+class GAConfig:
+    population: int = 24
+    generations: int = 20
+    tournament: int = 3
+    crossover_rate: float = 0.9
+    mutation_rate: float = 0.25
+    seed: int = 0
+
+
+class GAOptimizer:
+    """Window-limited multi-objective GA.
+
+    At each scheduling pass it evolves permutations of the current window;
+    fitness = per-resource utilization after greedily packing the
+    permutation onto the free resources (immediate effect, as in the
+    optimization literature).  Non-dominated sorting + crowding distance
+    pick the survivor; the winning permutation is then replayed one
+    selection at a time.
+    """
+
+    def __init__(self, config: GAConfig = GAConfig()):
+        self.config = config
+        self.rng = np.random.default_rng(config.seed)
+        self._plan: List[int] = []       # jids in planned order
+        self._plan_key: Tuple = ()
+
+    # --- fitness -----------------------------------------------------------
+    def _pack_objectives(self, perm, window, free, caps) -> np.ndarray:
+        used = {n: 0 for n in caps}
+        avail = dict(free)
+        for idx in perm:
+            job = window[idx]
+            if all(job.demands.get(n, 0) <= avail[n] for n in caps):
+                for n in caps:
+                    d = job.demands.get(n, 0)
+                    avail[n] -= d
+                    used[n] += d
+        busy = {n: caps[n] - free[n] for n in caps}
+        return np.array([(busy[n] + used[n]) / max(caps[n], 1) for n in caps])
+
+    @staticmethod
+    def _nondominated_rank(objs: np.ndarray) -> np.ndarray:
+        n = len(objs)
+        rank = np.zeros(n, int)
+        for i in range(n):
+            for k in range(n):
+                if k == i:
+                    continue
+                if np.all(objs[k] >= objs[i]) and np.any(objs[k] > objs[i]):
+                    rank[i] += 1           # i is dominated by k
+        return rank
+
+    def _evolve(self, window, free, caps) -> List[int]:
+        cfg = self.config
+        W = len(window)
+        if W == 1:
+            return [0]
+        pop = [self.rng.permutation(W) for _ in range(cfg.population)]
+        pop[0] = np.arange(W)              # seed with FCFS order
+        for _ in range(cfg.generations):
+            objs = np.stack([self._pack_objectives(p, window, free, caps)
+                             for p in pop])
+            rank = self._nondominated_rank(objs)
+            # crowding proxy: sum of objectives breaks ties inside a front
+            score = -rank + 1e-3 * objs.sum(1)
+            order = np.argsort(-score)
+            elites = [pop[i] for i in order[: cfg.population // 2]]
+            children = []
+            while len(children) < cfg.population - len(elites):
+                a, b = (elites[self.rng.integers(len(elites))] for _ in "ab")
+                child = self._ox(a, b) if self.rng.uniform() < cfg.crossover_rate \
+                    else a.copy()
+                if self.rng.uniform() < cfg.mutation_rate and W > 1:
+                    i, k = self.rng.choice(W, 2, replace=False)
+                    child[i], child[k] = child[k], child[i]
+                children.append(child)
+            pop = elites + children
+        objs = np.stack([self._pack_objectives(p, window, free, caps)
+                         for p in pop])
+        rank = self._nondominated_rank(objs)
+        best = np.argsort(rank - 1e-3 * objs.sum(1))[0]
+        return list(pop[best])
+
+    def _ox(self, a: np.ndarray, b: np.ndarray) -> np.ndarray:
+        """Order crossover for permutations."""
+        n = len(a)
+        i, k = sorted(self.rng.choice(n, 2, replace=False))
+        child = -np.ones(n, int)
+        child[i:k + 1] = a[i:k + 1]
+        fill = [x for x in b if x not in child]
+        ptr = 0
+        for pos in range(n):
+            if child[pos] < 0:
+                child[pos] = fill[ptr]
+                ptr += 1
+        return child
+
+    # --- policy ------------------------------------------------------------
+    def select(self, ctx: SchedContext) -> int:
+        key = (ctx.now, tuple(j.jid for j in ctx.window))
+        jids = [j.jid for j in ctx.window]
+        if self._plan_key != key or not any(j in jids for j in self._plan):
+            caps = dict(ctx.cluster.capacities)
+            free = dict(ctx.cluster.free)
+            order = self._evolve(ctx.window, free, caps)
+            self._plan = [ctx.window[i].jid for i in order]
+        # Serve the next planned jid still present in the window.
+        for jid in self._plan:
+            if jid in jids:
+                self._plan = self._plan[self._plan.index(jid) + 1:]
+                self._plan_key = (ctx.now, tuple(jids))
+                return jids.index(jid)
+        return 0
+
+
+# --------------------------------------------------------------------- RL
+@dataclass(frozen=True)
+class ScalarRLConfig:
+    window: int = 10
+    hidden: Tuple[int, ...] = (512, 128)
+    lr: float = 3e-4
+    gamma: float = 0.99
+    weights: Optional[Tuple[float, ...]] = None     # default: uniform 1/R
+    seed: int = 0
+    entropy_coef: float = 1e-3
+
+
+@functools.partial(jax.jit, static_argnums=(3,))
+def _pg_step(params, opt_state, batch, sizes, lr, entropy_coef):
+    def loss(p):
+        logits = mlp_apply(p, batch["state"])
+        logp = jax.nn.log_softmax(
+            jnp.where(batch["mask"], logits, -1e9), axis=-1)
+        taken = jnp.take_along_axis(logp, batch["action"][:, None], 1)[:, 0]
+        adv = batch["ret"] - batch["ret"].mean()
+        pg = -(taken * adv).mean()
+        ent = -(jnp.exp(logp) * jnp.where(batch["mask"], logp, 0.0)).sum(-1).mean()
+        return pg - entropy_coef * ent
+    l, grads = jax.value_and_grad(loss)(params)
+    params, opt_state = adam_update(grads, opt_state, params, lr=lr,
+                                    grad_clip=10.0)
+    return params, opt_state, l
+
+
+class ScalarRLPolicy:
+    """REINFORCE over window slots with a fixed-weight scalar reward."""
+
+    def __init__(self, resources: Sequence[ResourceSpec],
+                 config: ScalarRLConfig = ScalarRLConfig()):
+        self.resources = list(resources)
+        self.config = config
+        names = tuple(r.name for r in self.resources)
+        caps = tuple(r.capacity for r in self.resources)
+        self.enc = EncodingConfig(window=config.window, resource_names=names,
+                                  capacities=caps)
+        R = len(names)
+        self.weights = np.asarray(config.weights if config.weights
+                                  else [1.0 / R] * R)
+        sizes = [self.enc.state_dim, *config.hidden, config.window]
+        self.params = mlp_init(jax.random.PRNGKey(config.seed), sizes)
+        self.opt_state = adam_init(self.params)
+        self.rng = np.random.default_rng(config.seed)
+        self.training = False
+        self._states: List[np.ndarray] = []
+        self._actions: List[int] = []
+        self._masks: List[np.ndarray] = []
+        self._meas: List[np.ndarray] = []
+        self.losses: List[float] = []
+
+    def select(self, ctx: SchedContext) -> int:
+        state = encode_state(self.enc, ctx)
+        n_valid = min(len(ctx.window), self.config.window)
+        mask = np.zeros(self.config.window, bool)
+        mask[:n_valid] = True
+        logits = np.array(mlp_apply(self.params, jnp.asarray(state)))
+        logits[~mask] = -1e9
+        if self.training:
+            z = logits - logits.max()
+            probs = np.exp(z) / np.exp(z).sum()
+            action = int(self.rng.choice(self.config.window, p=probs))
+            self._states.append(state)
+            self._actions.append(action)
+            self._masks.append(mask)
+            self._meas.append(encode_measurement(self.enc, ctx))
+        else:
+            action = int(np.argmax(logits))
+        return action
+
+    def end_episode(self) -> Optional[float]:
+        if not self.training or len(self._actions) < 2:
+            self._states, self._actions, self._masks, self._meas = [], [], [], []
+            return None
+        meas = np.stack(self._meas)                       # (n, R)
+        # Fixed-weight scalar reward observed at the *next* decision.
+        scalar = meas @ self.weights
+        rewards = np.append(scalar[1:], scalar[-1])
+        rets = np.zeros_like(rewards)
+        acc = 0.0
+        for i in range(len(rewards) - 1, -1, -1):
+            acc = rewards[i] + self.config.gamma * acc
+            rets[i] = acc
+        batch = {
+            "state": jnp.asarray(np.stack(self._states)),
+            "action": jnp.asarray(np.asarray(self._actions, np.int32)),
+            "mask": jnp.asarray(np.stack(self._masks)),
+            "ret": jnp.asarray(rets.astype(np.float32)),
+        }
+        self.params, self.opt_state, loss = _pg_step(
+            self.params, self.opt_state, batch, self.config.window,
+            self.config.lr, self.config.entropy_coef)
+        self._states, self._actions, self._masks, self._meas = [], [], [], []
+        self.losses.append(float(loss))
+        return float(loss)

@@ -1,0 +1,53 @@
+"""Curriculum training driver for the MRSch agent (paper §III-D, §V-B)."""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+from ..sim.cluster import ResourceSpec
+from ..sim.simulator import SimResult, run_trace
+from .agent import MRSchAgent
+
+
+@dataclass
+class TrainLog:
+    episode_losses: List[float] = field(default_factory=list)
+    episode_metrics: List[Dict[str, float]] = field(default_factory=list)
+    wall_seconds: float = 0.0
+
+
+def train_agent(agent: MRSchAgent, resources: Sequence[ResourceSpec],
+                jobsets: Sequence[Sequence], epochs: int = 1,
+                verbose: bool = False) -> TrainLog:
+    """Run the agent through ordered jobsets with exploration + learning."""
+    log = TrainLog()
+    t0 = time.time()
+    agent.training = True
+    for epoch in range(epochs):
+        for i, jobs in enumerate(jobsets):
+            result = run_trace(resources, jobs, agent,
+                               window=agent.config.window)
+            loss = agent.end_episode()
+            if loss is not None:
+                log.episode_losses.append(loss)
+            log.episode_metrics.append(result.metrics.as_row())
+            if verbose:
+                u = result.metrics.utilization
+                print(f"[train] epoch {epoch} set {i}: loss={loss} "
+                      f"eps={agent.epsilon:.3f} util={u}")
+    agent.training = False
+    log.wall_seconds = time.time() - t0
+    return log
+
+
+def evaluate(policy, resources: Sequence[ResourceSpec],
+             jobs: Sequence, window: int = 10) -> SimResult:
+    """Deterministic evaluation run (no exploration, no learning)."""
+    was_training = getattr(policy, "training", False)
+    if hasattr(policy, "training"):
+        policy.training = False
+    result = run_trace(resources, jobs, policy, window=window)
+    if hasattr(policy, "training"):
+        policy.training = was_training
+    return result

@@ -1,0 +1,1 @@
+from .pipeline import DataConfig, input_specs, make_batch, synthetic_batch_iter

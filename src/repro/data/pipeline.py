@@ -1,0 +1,88 @@
+"""Data pipeline: deterministic synthetic token streams + input specs.
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every
+model input of a cell — weak-type-correct, shardable, no device allocation
+(the dry-run contract).  ``make_batch`` materializes the same structure
+with a deterministic PRNG for smoke tests and the end-to-end examples.
+
+For ``[vlm]``/``[audio]`` archs the modality frontend is a stub per the
+assignment: the pipeline supplies precomputed patch/frame *embeddings* of
+the backbone's d_model.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..configs.shapes import InputShape
+
+
+@dataclass(frozen=True)
+class DataConfig:
+    seed: int = 0
+    pad_id: int = 0
+
+
+def _token_shape(cfg: ModelConfig, batch: int, seq: int):
+    if cfg.n_codebooks > 1:
+        return (batch, seq, cfg.n_codebooks)
+    return (batch, seq)
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape,
+                dtype=jnp.bfloat16) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStructs for one (arch x input-shape) cell."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        B_, S_ = B, 1
+    else:
+        B_, S_ = B, S
+    specs: Dict[str, jax.ShapeDtypeStruct] = {}
+    if cfg.input_mode == "embeddings":
+        specs["embeddings"] = jax.ShapeDtypeStruct((B_, S_, cfg.d_model), dtype)
+    else:
+        specs["tokens"] = jax.ShapeDtypeStruct(_token_shape(cfg, B_, S_),
+                                               jnp.int32)
+    if shape.kind == "train":
+        specs["labels"] = jax.ShapeDtypeStruct(_token_shape(cfg, B, S),
+                                               jnp.int32)
+    return specs
+
+
+def make_batch(cfg: ModelConfig, shape: InputShape, step: int = 0,
+               data: DataConfig = DataConfig(), dtype=jnp.float32
+               ) -> Dict[str, jnp.ndarray]:
+    """Materialized batch matching ``input_specs`` (deterministic)."""
+    rng = np.random.default_rng(data.seed * 100_003 + step)
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        B_, S_ = B, 1
+    else:
+        B_, S_ = B, S
+    out: Dict[str, jnp.ndarray] = {}
+    if cfg.input_mode == "embeddings":
+        out["embeddings"] = jnp.asarray(
+            rng.standard_normal((B_, S_, cfg.d_model), np.float32), dtype)
+    else:
+        out["tokens"] = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, _token_shape(cfg, B_, S_)),
+            jnp.int32)
+    if shape.kind == "train":
+        out["labels"] = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, _token_shape(cfg, B, S)),
+            jnp.int32)
+    return out
+
+
+def synthetic_batch_iter(cfg: ModelConfig, shape: InputShape,
+                         data: DataConfig = DataConfig(),
+                         dtype=jnp.float32) -> Iterator[Dict[str, jnp.ndarray]]:
+    step = 0
+    while True:
+        yield make_batch(cfg, shape, step, data, dtype)
+        step += 1

@@ -1,0 +1,2 @@
+from .sharding import (Rules, current_rules, default_rules, named_sharding,
+                       param_pspecs, param_shardings, shard, use_rules)

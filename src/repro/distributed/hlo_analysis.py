@@ -1,0 +1,140 @@
+"""Compiled-HLO analysis: collective traffic + roofline terms.
+
+``collective_stats`` parses a compiled module's text and models per-device
+wire bytes per collective (documented, simple ring models):
+
+  all-gather        S_result * (n-1)/n      received per device
+  reduce-scatter    S_operand * (n-1)/n
+  all-reduce        2 * S * (n-1)/n         (ring RS + AG)
+  all-to-all        S * (n-1)/n
+  collective-permute S                      (one hop)
+
+where n = participants per replica group.  Sizes come from the printed
+shapes; scan bodies appear once in the text, so the dry-run takes its
+collective totals from the unrolled L=1/L=2 extrapolation lowers (exact),
+and full-depth compiles are used for memory analysis only.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+}
+
+_SHAPE_RE = re.compile(r"(pred|[suf]\d+|bf16|c64)\[([\d,]*)\]")
+# XLA:CPU legalizes bf16 arithmetic to f32, so compiled-module shapes show
+# f32 where the TPU program carries bf16.  For the TPU roofline we count
+# floating-point collective payloads at 2 bytes/element ("bf16-adjusted");
+# raw CPU bytes are kept alongside for transparency.
+_DTYPE_BYTES_BF16ADJ = dict(_DTYPE_BYTES, f32=2, f64=2)
+_COLL_RE = re.compile(
+    r"^\s*(?:%\S+\s*=\s*)?(\(?[^=]*?\)?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.M)
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(type_str: str, bf16_adjusted: bool = False) -> int:
+    table = _DTYPE_BYTES_BF16ADJ if bf16_adjusted else _DTYPE_BYTES
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        for d in dims.split(","):
+            if d.strip():
+                n *= int(d)
+        total += n * table.get(dt, 4)
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    ops: List[dict] = field(default_factory=list)
+
+    @property
+    def wire_bytes(self) -> float:
+        return sum(o["wire_bytes"] for o in self.ops)
+
+    def by_kind(self) -> Dict[str, float]:
+        out: Dict[str, float] = {}
+        for o in self.ops:
+            out[o["kind"]] = out.get(o["kind"], 0.0) + o["wire_bytes"]
+        return out
+
+    def count(self) -> int:
+        return len(self.ops)
+
+
+def collective_stats(hlo_text: str, bf16_adjusted: bool = True
+                     ) -> CollectiveStats:
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = re.search(
+            r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+            r"collective-permute)(-start|-done)?\(", line)
+        if not m or "=" not in line:
+            continue
+        if m.group(2) == "-done":
+            continue                          # counted at -start
+        kind = m.group(1)
+        # Result type sits between '=' and the op name:
+        #   %ag = bf16[16,2048]{...} all-gather(bf16[1,2048] %x), ...
+        eq = line.index("=")
+        result_bytes = _shape_bytes(line[eq + 1: m.start(1)], bf16_adjusted)
+        # group size
+        n = 1
+        g = _GROUPS_RE.search(line)
+        if g:
+            n = len([x for x in g.group(1).split(",") if x.strip()])
+        else:
+            gi = _GROUPS_IOTA_RE.search(line)
+            if gi:
+                n = int(gi.group(2))
+        if n <= 1:
+            continue
+        frac = (n - 1) / n
+        if kind == "all-reduce":
+            wire = 2 * result_bytes * frac
+        elif kind == "reduce-scatter":
+            wire = result_bytes * n * frac    # operand = result * n
+        elif kind == "collective-permute":
+            wire = result_bytes
+        else:                                  # all-gather / all-to-all
+            wire = result_bytes * frac
+        # result printed is the GLOBAL logical shape in SPMD modules;
+        # per-device share:
+        stats.ops.append({"kind": kind, "bytes": result_bytes,
+                          "group": n, "wire_bytes": wire})
+    return stats
+
+
+@dataclass(frozen=True)
+class Hardware:
+    """TPU v5e-class target (per chip)."""
+    peak_bf16_flops: float = 197e12
+    hbm_bw: float = 819e9
+    ici_bw: float = 50e9               # per link
+    hbm_gb: float = 16.0
+
+
+V5E = Hardware()
+
+
+def roofline_terms(flops_per_device: float, bytes_per_device: float,
+                   wire_bytes_per_device: float, hw: Hardware = V5E
+                   ) -> Dict[str, float]:
+    t_c = flops_per_device / hw.peak_bf16_flops
+    t_m = bytes_per_device / hw.hbm_bw
+    t_n = wire_bytes_per_device / hw.ici_bw
+    dom = max(("compute", t_c), ("memory", t_m), ("collective", t_n),
+              key=lambda kv: kv[1])
+    bound = max(t_c, t_m, t_n)
+    return {
+        "compute_s": t_c, "memory_s": t_m, "collective_s": t_n,
+        "dominant": dom[0],
+        "roofline_fraction": t_c / bound if bound > 0 else 0.0,
+    }

@@ -1,0 +1,272 @@
+"""Logical-axis sharding rules.
+
+Models annotate activations with *logical* axes (``shard(x, "batch", None,
+"heads", None)``); parameters get PartitionSpecs from :func:`param_pspec`.
+The mapping logical axis -> mesh axes lives in one place (:class:`Rules`)
+and is installed with :func:`use_rules`, so swapping a sharding strategy is
+a one-object change (this is the lever most §Perf iterations pull).
+
+Divisibility is respected automatically: a logical axis only maps to a mesh
+axis when the dimension divides the mesh-axis size (e.g. gemma-2b's 8 query
+heads stay unsharded on a model=16 mesh instead of failing to lower).
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from dataclasses import dataclass, field, replace
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+
+@dataclass(frozen=True)
+class Rules:
+    """Logical axis -> mesh axis (or tuple for combined axes)."""
+    mapping: Dict[str, MeshAxes] = field(default_factory=dict)
+    mesh: Optional[Mesh] = None
+
+    def resolve(self, logical: Optional[str], dim: Optional[int] = None) -> MeshAxes:
+        if logical is None or self.mesh is None:
+            return None
+        axes = self.mapping.get(logical)
+        if axes is None:
+            return None
+        if isinstance(axes, str):
+            axes = (axes,)
+        # Keep the largest prefix of mesh axes that divides the dim.
+        if dim is not None:
+            total = 1
+            kept = []
+            for a in axes:
+                n = self.mesh.shape[a]
+                if dim % (total * n) == 0:
+                    kept.append(a)
+                    total *= n
+                else:
+                    break
+            axes = tuple(kept)
+        if not axes:
+            return None
+        return axes if len(axes) > 1 else axes[0]
+
+    def spec(self, logical_axes: Sequence[Optional[str]],
+             shape: Optional[Sequence[int]] = None) -> P:
+        """Resolve logical axes to a PartitionSpec.  A mesh axis may appear
+        on at most one dim; when two logical axes resolve to the same mesh
+        axis (e.g. act_seq and vocab both -> model), the leftmost wins."""
+        dims = shape if shape is not None else [None] * len(logical_axes)
+        used = set()
+        out = []
+        for ax, d in zip(logical_axes, dims):
+            r = self.resolve(ax, d)
+            axes = (r,) if isinstance(r, str) else (r or ())
+            kept = tuple(a for a in axes if a not in used)
+            used.update(kept)
+            out.append(kept if len(kept) > 1 else (kept[0] if kept else None))
+        return P(*out)
+
+
+def default_rules(mesh: Mesh) -> Rules:
+    """Baseline strategy: batch over (pod, data); fsdp param shard over
+    data; tensor parallel (heads / mlp / experts / vocab) over model."""
+    axes = dict(
+        batch=("pod", "data") if "pod" in mesh.axis_names else ("data",),
+        fsdp=("data",),
+        heads=("model",),
+        kv_heads=("model",),
+        mlp=("model",),
+        experts=("model",),
+        vocab=("model",),
+        seq=None,
+        embed=None,
+        act_seq=None,       # residual-stream S stays unsharded (baseline)
+        kv_seq=None,        # decode caches replicated over model (baseline)
+    )
+    return Rules(mapping=axes, mesh=mesh)
+
+
+def optimized_rules(mesh: Mesh) -> Rules:
+    """§Perf strategy: baseline + sequence parallelism (residual stream S
+    sharded over model — shrinks remat saves 16x and turns the per-layer
+    2xAllReduce into ReduceScatter+AllGather) + decode KV caches sharded
+    over model along the sequence axis."""
+    base = default_rules(mesh)
+    mapping = dict(base.mapping)
+    mapping.update(act_seq=("model",), kv_seq=("model",))
+    return Rules(mapping=mapping, mesh=mesh)
+
+
+def serve_rules(mesh: Mesh) -> Rules:
+    """Inference strategy: weights are *resident*, never fsdp-gathered —
+    experts shard over (model x data) (e.g. one of DeepSeek-V3's 256
+    experts per chip on a 256-chip pod), dense/attention weights over
+    model only; decode caches shard their sequence axis over model."""
+    base = default_rules(mesh)
+    mapping = dict(base.mapping)
+    mapping.update(fsdp=None, experts=("model", "data"),
+                   act_seq=("model",), kv_seq=("model",))
+    return Rules(mapping=mapping, mesh=mesh)
+
+
+RULE_SETS = {"baseline": default_rules, "opt": optimized_rules,
+             "serve": serve_rules}
+
+
+def tp_row_matmul(h, w, out_shard_axes=("batch", "act_seq", None)):
+    """Row-parallel TP matmul with an explicit reduce-scatter epilogue.
+
+    h (B, S, F) with F sharded over "model"; w (F, D) with rows sharded
+    over "model".  Computes the local partial product and finishes with
+    ``psum_scatter`` over the sequence — the Megatron-SP schedule.  GSPMD
+    on XLA:CPU emits AllReduce(+slice) here (the AR->ReduceScatter pass is
+    TPU-only), which doubles wire bytes; shard_map pins the collective.
+
+    Falls back to a plain matmul when no suitable rules/mesh are active.
+    """
+    rules = current_rules()
+    if rules is None or rules.mesh is None:
+        return h @ w
+    mesh = rules.mesh
+    if "model" not in mesh.shape:
+        return h @ w
+    n_model = mesh.shape["model"]
+    B, S, F = h.shape
+    D = w.shape[-1]
+    seq_axes = rules.mapping.get("act_seq")
+    if (seq_axes != ("model",) or S % n_model or F % n_model
+            or w.shape[0] != F):
+        return h @ w
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    n_batch = 1
+    for a in batch_axes:
+        n_batch *= mesh.shape[a]
+    if B % n_batch:
+        batch_axes, n_batch = (), 1
+
+    def body(h_loc, w_loc):
+        partial = h_loc @ w_loc                       # (B_loc, S, D)
+        return jax.lax.psum_scatter(partial, "model", scatter_dimension=1,
+                                    tiled=True)       # (B_loc, S/16, D)
+
+    return jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(batch_axes or None, None, "model"), P("model", None)),
+        out_specs=P(batch_axes or None, "model", None),
+        check_vma=False,
+    )(h, w)
+
+
+_state = threading.local()
+
+
+def current_rules() -> Optional[Rules]:
+    return getattr(_state, "rules", None)
+
+
+@contextmanager
+def use_rules(rules: Optional[Rules]):
+    prev = current_rules()
+    _state.rules = rules
+    try:
+        yield rules
+    finally:
+        _state.rules = prev
+
+
+def shard(x, *logical_axes):
+    """Constrain an activation's sharding by logical axes (no-op when no
+    rules are installed, e.g. single-device smoke tests)."""
+    rules = current_rules()
+    if rules is None or rules.mesh is None:
+        return x
+    spec = rules.spec(logical_axes, x.shape)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(rules.mesh, spec))
+
+
+def named_sharding(logical_axes: Sequence[Optional[str]],
+                   shape: Optional[Sequence[int]] = None) -> Optional[NamedSharding]:
+    rules = current_rules()
+    if rules is None or rules.mesh is None:
+        return None
+    return NamedSharding(rules.mesh, rules.spec(logical_axes, shape))
+
+
+# ---------------------------------------------------------------- params
+# Parameter logical axes are declared per path fragment; ``param_pspecs``
+# walks a pytree of ShapeDtypeStructs and returns matching PartitionSpecs.
+PARAM_AXES: Dict[str, Tuple[Optional[str], ...]] = {
+    # name fragment -> logical axes per dim (excluding a stacked L prefix)
+    "embed/table": ("vocab", "fsdp"),
+    "lm_head/w": ("fsdp", "vocab"),
+    "attn/wq": ("fsdp", "heads"),
+    "attn/wk": ("fsdp", "kv_heads"),
+    "attn/wv": ("fsdp", "kv_heads"),
+    "attn/wo": ("heads", "fsdp"),
+    "mla/w_dq": ("fsdp", None),
+    "mla/w_uq": (None, "heads"),
+    "mla/w_dkv": ("fsdp", None),
+    "mla/w_uk": (None, "heads"),
+    "mla/w_uv": (None, "heads"),
+    "mla/wo": ("heads", "fsdp"),
+    "mlp/w_gate": ("fsdp", "mlp"),
+    "mlp/w_up": ("fsdp", "mlp"),
+    "mlp/w_down": ("mlp", "fsdp"),
+    "moe/router": ("fsdp", None),
+    "moe/w_gate": ("experts", "fsdp", None),
+    "moe/w_up": ("experts", "fsdp", None),
+    "moe/w_down": ("experts", None, "fsdp"),
+    "shared/w_gate": ("fsdp", "mlp"),
+    "shared/w_up": ("fsdp", "mlp"),
+    "shared/w_down": ("mlp", "fsdp"),
+    "ssm/w_x": ("fsdp", "heads"),
+    "ssm/w_z": ("fsdp", "heads"),
+    "ssm/w_B": ("fsdp", None),
+    "ssm/w_C": ("fsdp", None),
+    "ssm/w_dt": ("fsdp", None),
+    "ssm/conv": (None, "heads"),
+    "ssm/out_proj": ("heads", "fsdp"),
+    "ssm/A_log": (None,),
+    "ssm/D": (None,),
+    "ssm/dt_bias": (None,),
+    "norm/scale": (None,),
+    "scale": (None,),
+}
+
+
+def _match_axes(path: str, ndim: int) -> Tuple[Optional[str], ...]:
+    best = None
+    for frag, axes in PARAM_AXES.items():
+        if path.endswith(frag) or f"/{frag}" in path or frag in path:
+            if best is None or len(frag) > len(best[0]):
+                best = (frag, axes)
+    if best is None:
+        return (None,) * ndim
+    axes = best[1]
+    if len(axes) < ndim:                       # stacked layer prefix dims
+        axes = (None,) * (ndim - len(axes)) + tuple(axes)
+    return axes[:ndim]
+
+
+def param_pspecs(params, rules: Rules):
+    """Pytree of PartitionSpecs matching ``params`` (ShapeDtypeStructs or
+    arrays) under ``rules``."""
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    treedef = jax.tree_util.tree_structure(params)
+    specs = []
+    for path, leaf in flat:
+        spath = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        axes = _match_axes(spath, leaf.ndim)
+        specs.append(rules.spec(axes, leaf.shape))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def param_shardings(params, rules: Rules):
+    specs = param_pspecs(params, rules)
+    return jax.tree.map(lambda s: NamedSharding(rules.mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))

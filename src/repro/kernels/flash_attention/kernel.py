@@ -1,0 +1,94 @@
+"""Pallas TPU kernel: causal FlashAttention (online softmax).
+
+Grid = (batch*heads, n_q_blocks, n_k_blocks) with the K loop innermost; the
+running max m, normalizer l and f32 output accumulator persist in VMEM
+scratch across K steps of one (bh, qi) tile.  Causal masking is positional;
+blocks entirely above the diagonal contribute nothing (masked to -inf;
+the `ops` wrapper also clips the K grid per Q block via masking — on real
+TPUs a further win is to skip those blocks with a scalar prefetch grid,
+noted in EXPERIMENTS §Perf).
+
+Tiles: q (bq x dh), k/v (bk x dh), MXU-aligned (bq, bk multiples of 128
+for bf16; dh 64-256 as the model dictates).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  n_k: int, block_q: int, block_k: int, scale: float,
+                  causal: bool, seq_len: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]                                     # (bq, dh)
+    k = k_ref[0]                                     # (bk, dh)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+
+    qpos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    kpos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = kpos < seq_len
+    if causal:
+        mask = mask & (qpos >= kpos)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                              # (bq, 1)
+    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=1, keepdims=True)
+    m_ref[...] = m_new
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p.astype(v_ref.dtype), v_ref[0], preferred_element_type=jnp.float32)
+
+    @pl.when(ki == n_k - 1)
+    def _finalize():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_kernel(q, k, v, *, causal: bool = True,
+                           block_q: int = 128, block_k: int = 128,
+                           kv_len: int | None = None,
+                           interpret: bool = False) -> jnp.ndarray:
+    """q (BH, Sq, dh), k/v (BH, Sk, dh) — padded to block multiples by ops.
+    ``kv_len`` = true (unpadded) KV length for masking."""
+    BH, Sq, dh = q.shape
+    Sk = k.shape[1]
+    assert Sq % block_q == 0 and Sk % block_k == 0
+    n_q, n_k = Sq // block_q, Sk // block_k
+    scale = dh ** -0.5
+    kernel = functools.partial(
+        _flash_kernel, n_k=n_k, block_q=block_q, block_k=block_k,
+        scale=scale, causal=causal, seq_len=kv_len or Sk)
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, block_q, dh), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, dh), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, dh), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, dh), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),    # running max
+            pltpu.VMEM((block_q, 1), jnp.float32),    # normalizer
+            pltpu.VMEM((block_q, dh), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

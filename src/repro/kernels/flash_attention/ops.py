@@ -1,0 +1,44 @@
+"""jit'd public wrapper: GQA-aware flash attention.
+
+Flattens (B, H) -> BH, repeats KV heads to query heads (simple v1 GQA;
+a grouped-DOT kernel that avoids the repeat is a recorded §Perf follow-up),
+pads sequence lengths to block multiples, and calls the Pallas kernel
+(interpret mode on CPU, compiled on TPU)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = True):
+    """q (B, Sq, H, dh); k/v (B, Sk, KV, dh); returns (B, Sq, H, dh)."""
+    B, Sq, H, dh = q.shape
+    KV = k.shape[2]
+    if KV != H:
+        rep = H // KV
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, dh)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * H, -1, dh)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * H, -1, dh)
+
+    pad_q = (-Sq) % block_q
+    Sk = kf.shape[1]
+    pad_k = (-Sk) % block_k
+    if pad_q:
+        qf = jnp.pad(qf, ((0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        kf = jnp.pad(kf, ((0, 0), (0, pad_k), (0, 0)))
+        vf = jnp.pad(vf, ((0, 0), (0, pad_k), (0, 0)))
+    out = flash_attention_kernel(qf, kf, vf, causal=causal, block_q=block_q,
+                                 block_k=block_k, kv_len=Sk,
+                                 interpret=interpret)
+    out = out[:, :Sq]
+    return out.reshape(B, H, Sq, dh).transpose(0, 2, 1, 3)

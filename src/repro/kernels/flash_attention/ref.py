@@ -1,0 +1,18 @@
+"""Pure-jnp oracle: dense softmax attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, causal: bool = True):
+    """q (BH, Sq, dh), k/v (BH, Sk, dh)."""
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        Sq, Sk = s.shape[-2], s.shape[-1]
+        mask = jnp.arange(Sq)[:, None] >= jnp.arange(Sk)[None, :]
+        s = jnp.where(mask, s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", w, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,57 @@
+"""jit'd public wrapper for the fused-MLP kernel.
+
+Pads (M, N, K) to block multiples, runs the Pallas kernel (interpret mode
+on CPU, compiled on TPU), slices the result back, and exposes a
+``dfp_state_module`` convenience that runs the whole DFP state MLP
+through the kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import fused_mlp_layer
+from .ref import fused_mlp_layer_ref
+
+
+def _pad_to(x, m, axis):
+    pad = (-x.shape[axis]) % m
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("activation", "slope",
+                                             "block_m", "block_n", "block_k",
+                                             "interpret"))
+def fused_mlp(x, w, b, *, activation: str = "leaky_relu", slope: float = 0.2,
+              block_m: int = 128, block_n: int = 256, block_k: int = 512,
+              interpret: bool = True):
+    """y = act(x @ w + b) with arbitrary (M, K, N)."""
+    squeeze = x.ndim == 1
+    if squeeze:
+        x = x[None]
+    M, K = x.shape
+    N = w.shape[1]
+    block_m = min(block_m, max(8, 1 << (M - 1).bit_length()))
+    xp = _pad_to(_pad_to(x, block_m, 0), block_k, 1)
+    wp = _pad_to(_pad_to(w, block_k, 0), block_n, 1)
+    bp = _pad_to(b, block_n, 0)
+    y = fused_mlp_layer(xp, wp, bp, activation=activation, slope=slope,
+                        block_m=block_m, block_n=block_n, block_k=block_k,
+                        interpret=interpret)
+    y = y[:M, :N]
+    return y[0] if squeeze else y
+
+
+def dfp_state_module(x, layers, *, interpret: bool = True):
+    """Run the DFP state-module MLP (list of {'w','b'}) fused layer-by-layer
+    (hidden layers use leaky_relu; final layer too, per MRSch §III-A)."""
+    h = x
+    for layer in layers:
+        h = fused_mlp(h, layer["w"], layer["b"], activation="leaky_relu",
+                      interpret=interpret)
+    return h

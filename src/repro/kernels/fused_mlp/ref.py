@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the fused MLP kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def fused_mlp_layer_ref(x, w, b, activation: str = "leaky_relu",
+                        slope: float = 0.2):
+    y = (x.astype(jnp.float32) @ w.astype(jnp.float32)
+         + b.astype(jnp.float32))
+    if activation == "leaky_relu":
+        y = jnp.where(y >= 0, y, slope * y)
+    elif activation == "relu":
+        y = jnp.maximum(y, 0.0)
+    elif activation == "tanh":
+        y = jnp.tanh(y)
+    return y.astype(x.dtype)

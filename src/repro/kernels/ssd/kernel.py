@@ -1,0 +1,80 @@
+"""Pallas TPU kernel: Mamba2 SSD (state-space duality), chunked.
+
+One kernel computes the whole sequence mix per (batch*head): the grid is
+(BH, n_chunks) with chunks innermost; the (P x N) SSM state persists in
+VMEM scratch across chunk steps, so the inter-chunk recurrence costs no
+HBM round-trips (this is the TPU-native replacement for the GPU
+implementation's separate intra/inter passes):
+
+  per chunk c:  y  = tril(C B^T * exp(l_i - l_j)) * dt  @ x     (intra, MXU)
+                y += exp(l) * (C @ h^T)                          (inter)
+                h  = exp(l_last) * h + (exp(l_last - l) dt B)^T @ x
+
+Inputs are pre-projected (x, dt, B, C per token) — the projections stay in
+XLA where they fuse with neighbours; the kernel owns the quadratic core.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, l_ref, b_ref, c_ref, o_ref, h_ref, *,
+                n_chunks: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[0].astype(jnp.float32)          # (Q, P)
+    dt = dt_ref[0].astype(jnp.float32)        # (Q, 1)
+    l = l_ref[0].astype(jnp.float32)          # (Q, 1) cumsum(dA) in chunk
+    B = b_ref[0].astype(jnp.float32)          # (Q, N)
+    C = c_ref[0].astype(jnp.float32)          # (Q, N)
+    Q = x.shape[0]
+
+    # --- intra-chunk quadratic term
+    scores = jnp.dot(C, B.T, preferred_element_type=jnp.float32)   # (Q, Q)
+    decay = jnp.exp(l - l.T)                                       # l_i - l_j
+    ii = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    w = jnp.where(ii >= jj, scores * decay * dt.T, 0.0)
+    y = jnp.dot(w, x, preferred_element_type=jnp.float32)          # (Q, P)
+
+    # --- inter-chunk contribution from the carried state
+    h = h_ref[...]                                                 # (N, P)
+    y = y + jnp.exp(l) * jnp.dot(C, h, preferred_element_type=jnp.float32)
+
+    # --- state update for the next chunk
+    l_last = l[Q - 1]                                              # (1,)
+    sdec = jnp.exp(l_last[None] - l)                               # (Q, 1)
+    h_ref[...] = (jnp.exp(l_last)[:, None] * h
+                  + jnp.dot((B * sdec * dt).T, x,
+                            preferred_element_type=jnp.float32))
+    o_ref[0] = y.astype(o_ref.dtype)
+
+
+def ssd_kernel(x, dt, l, B, C, *, chunk: int,
+               interpret: bool = False) -> jnp.ndarray:
+    """x (BH, S, P); dt/l (BH, S, 1); B/C (BH, S, N); S % chunk == 0.
+    Returns y (BH, S, P)."""
+    BH, S, P = x.shape
+    N = B.shape[-1]
+    assert S % chunk == 0, (S, chunk)
+    n_chunks = S // chunk
+    kernel = functools.partial(_ssd_kernel, n_chunks=n_chunks)
+    spec = lambda d: pl.BlockSpec((1, chunk, d), lambda b, c: (b, c, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, n_chunks),
+        in_specs=[spec(P), spec(1), spec(1), spec(N), spec(N)],
+        out_specs=spec(P),
+        out_shape=jax.ShapeDtypeStruct((BH, S, P), x.dtype),
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, l, B, C)

@@ -1,0 +1,37 @@
+"""Pure-jnp oracle: the exact sequential SSM recurrence.
+
+  h_t = exp(dA_t) * h_{t-1} + dt_t * B_t x_t^T
+  y_t = C_t . h_t
+
+This is the ground truth both the Pallas kernel and the vectorized
+chunked implementation in ``repro.models.mamba2`` must match.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x, dt, dA, B, C):
+    """x (BH,S,P); dt/dA (BH,S,1); B/C (BH,S,N) -> y (BH,S,P)."""
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    dAf = dA.astype(jnp.float32)
+    Bf = B.astype(jnp.float32)
+    Cf = C.astype(jnp.float32)
+
+    def step(h, inp):
+        xt, dtt, dat, bt, ct = inp
+        h = jnp.exp(dat)[:, None, None] * h \
+            + (dtt[:, None] * bt)[..., None] * xt[:, None, :]
+        y = jnp.einsum("bn,bnp->bp", ct, h)
+        return h, y
+
+    BH, S, P = x.shape
+    N = B.shape[-1]
+    h0 = jnp.zeros((BH, N, P), jnp.float32)
+    xs = (xf.transpose(1, 0, 2), dtf.transpose(1, 0, 2)[..., 0],
+          dAf.transpose(1, 0, 2)[..., 0], Bf.transpose(1, 0, 2),
+          Cf.transpose(1, 0, 2))
+    _, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 0, 2).astype(x.dtype)

@@ -1,0 +1,195 @@
+"""Multi-pod dry-run: AOT lower+compile every (arch x shape x mesh) cell.
+
+MUST be the very first two lines (jax locks the device count on first
+init): force 512 placeholder host devices for the production meshes.
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import json
+import time
+import traceback
+from dataclasses import replace
+
+import jax
+
+from ..configs import SHAPE_ORDER, SHAPES, all_configs, cell_supported, get_config
+from ..distributed.costs import cell_costs, flash_correction
+from ..distributed.hlo_analysis import V5E, collective_stats, roofline_terms
+from ..distributed.sharding import RULE_SETS, default_rules
+from .mesh import make_production_mesh
+from .steps import build_cell
+
+RESULTS_DIR = os.environ.get("REPRO_RESULTS", "results/dryrun")
+
+
+def _truncated(cfg, n_units: int):
+    """Reduced-depth config with the same per-unit composition."""
+    if cfg.family == "hybrid":
+        return replace(cfg, n_layers=cfg.hybrid.attn_period * n_units)
+    prefix = cfg.moe.first_dense_layers if cfg.moe else 0
+    return replace(cfg, n_layers=prefix + n_units)
+
+
+def _n_units(cfg) -> float:
+    if cfg.family == "hybrid":
+        return cfg.n_layers / cfg.hybrid.attn_period
+    prefix = cfg.moe.first_dense_layers if cfg.moe else 0
+    return cfg.n_layers - prefix
+
+
+def _lower_compile(cfg, shape, rules, unroll, microbatches=1):
+    jitted, args = build_cell(cfg, shape, rules, unroll=unroll,
+                              microbatches=microbatches)
+    t0 = time.time()
+    lowered = jitted.lower(*args)
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+    return compiled, {"lower_s": t1 - t0, "compile_s": t2 - t1}
+
+
+def run_cell(arch: str, sname: str, multi_pod: bool, extrapolate: bool = True,
+             rules_fn=default_rules, tag: str = "",
+             microbatches: int = 1) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[sname]
+    ok, reason = cell_supported(cfg, shape)
+    rec = {"arch": arch, "shape": sname,
+           "mesh": "2x16x16" if multi_pod else "16x16", "tag": tag}
+    if not ok:
+        rec.update(status="skipped", reason=reason)
+        return rec
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = rules_fn(mesh)
+    n_chips = 512 if multi_pod else 256
+
+    try:
+        compiled, times = _lower_compile(cfg, shape, rules, unroll=False,
+                                         microbatches=microbatches)
+    except Exception as e:
+        rec.update(status="failed", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+        return rec
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    rec.update(
+        status="ok", **times,
+        mem=dict(
+            argument_bytes=ma.argument_size_in_bytes,
+            output_bytes=ma.output_size_in_bytes,
+            temp_bytes=ma.temp_size_in_bytes,
+            alias_bytes=ma.alias_size_in_bytes,
+            total_hbm_gb=(ma.argument_size_in_bytes + ma.output_size_in_bytes
+                          + ma.temp_size_in_bytes
+                          - ma.alias_size_in_bytes) / 1e9,
+        ),
+        scanned_flops=float(ca.get("flops", 0.0)),
+        scanned_bytes=float(ca.get("bytes accessed", 0.0)),
+    )
+
+    if extrapolate and not multi_pod:
+        try:
+            f, b, w, nops = [], [], [], []
+            for n in (1, 2):
+                cfg_n = _truncated(cfg, n)
+                comp_n, _ = _lower_compile(cfg_n, shape, rules, unroll=True,
+                                           microbatches=microbatches)
+                ca_n = comp_n.cost_analysis() or {}
+                st = collective_stats(comp_n.as_text())
+                f.append(float(ca_n.get("flops", 0.0)))
+                b.append(float(ca_n.get("bytes accessed", 0.0)))
+                w.append(st.wire_bytes)
+                nops.append(st.count())
+            units = _n_units(cfg)
+            flops_dev = f[0] + (units - 1) * (f[1] - f[0])
+            bytes_dev_raw = b[0] + (units - 1) * (b[1] - b[0])
+            wire_dev = w[0] + (units - 1) * (w[1] - w[0])
+            corr = flash_correction(cfg, shape)
+            flops_dev += corr["flops"] / n_chips
+            bytes_dev_raw += corr["bytes"] / n_chips
+            # XLA:CPU legalizes bf16 to f32, doubling reported HBM traffic
+            # relative to the TPU program; the roofline uses the
+            # bf16-adjusted estimate (raw kept alongside).
+            bytes_dev = bytes_dev_raw * 0.5
+            costs = cell_costs(cfg, shape)
+            terms = roofline_terms(flops_dev, bytes_dev, wire_dev)
+            rec.update(
+                hlo_flops_per_device=flops_dev,
+                hlo_bytes_per_device=bytes_dev,
+                hlo_bytes_per_device_raw_f32=bytes_dev_raw,
+                wire_bytes_per_device=wire_dev,
+                collective_ops_L1=nops[0], collective_ops_L2=nops[1],
+                flash_corr_flops=corr["flops"] / n_chips,
+                model_flops_global=costs.model_flops_global,
+                model_flops_per_device=costs.model_flops_global / n_chips,
+                useful_ratio=(costs.model_flops_global / n_chips)
+                / max(flops_dev, 1.0),
+                roofline=terms,
+            )
+        except Exception as e:
+            rec.update(extrapolation_error=f"{type(e).__name__}: {e}",
+                       traceback=traceback.format_exc()[-2000:])
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None, help="single arch (default all)")
+    ap.add_argument("--shape", default=None, help="single shape (default all)")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--no-extrapolate", action="store_true")
+    ap.add_argument("--rules", default="baseline", choices=list(RULE_SETS))
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--out", default=RESULTS_DIR)
+    ap.add_argument("--force", action="store_true", help="recompute cached")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    archs = [args.arch] if args.arch else list(all_configs())
+    shapes = [args.shape] if args.shape else SHAPE_ORDER
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    failures = 0
+    for arch in archs:
+        for sname in shapes:
+            for multi in meshes:
+                cell_id = f"{arch}__{sname}__{'multi' if multi else 'single'}"
+                if args.rules != "baseline":
+                    cell_id += f"__{args.rules}"
+                if args.microbatches > 1:
+                    cell_id += f"__mb{args.microbatches}"
+                path = os.path.join(args.out, cell_id + ".json")
+                if os.path.exists(path) and not args.force:
+                    with open(path) as fh:
+                        rec = json.load(fh)
+                    print(f"[cached] {cell_id}: {rec['status']}")
+                    continue
+                t0 = time.time()
+                rec = run_cell(arch, sname, multi,
+                               extrapolate=not args.no_extrapolate,
+                               rules_fn=RULE_SETS[args.rules],
+                               tag=args.rules,
+                               microbatches=args.microbatches)
+                rec["wall_s"] = time.time() - t0
+                with open(path, "w") as fh:
+                    json.dump(rec, fh, indent=1)
+                line = f"[{rec['status']:7s}] {cell_id} ({rec['wall_s']:.0f}s)"
+                if rec["status"] == "ok":
+                    line += (f" mem={rec['mem']['total_hbm_gb']:.2f}GB/dev"
+                             f" compile={rec['compile_s']:.0f}s")
+                    if "roofline" in rec:
+                        r = rec["roofline"]
+                        line += (f" dom={r['dominant']}"
+                                 f" frac={r['roofline_fraction']:.2f}")
+                elif rec["status"] == "failed":
+                    failures += 1
+                    line += " " + rec.get("error", "")[:160]
+                print(line, flush=True)
+    print(f"done; failures={failures}")
+    return failures
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,201 @@
+"""jit-able train / prefill / decode steps + their sharding plumbing."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig
+from ..configs.shapes import InputShape
+from ..data.pipeline import input_specs
+from ..distributed.sharding import Rules, param_pspecs, use_rules
+from ..models import transformer
+from ..optim import OptConfig, opt_init, opt_update
+
+CACHE_AXES = {
+    "k": (None, "batch", "kv_seq", "kv_heads", None),
+    "v": (None, "batch", "kv_seq", "kv_heads", None),
+    "c": (None, "batch", "kv_seq", None),
+    "rope": (None, "batch", "kv_seq", None),
+    "state": (None, "batch", "heads", None, None),
+    "conv": (None, "batch", None, None),
+}
+
+
+def batch_pspec(rules: Rules, specs: Dict[str, jax.ShapeDtypeStruct]):
+    out = {}
+    for k, v in specs.items():
+        axes = ["batch"] + [None] * (v.ndim - 1)
+        out[k] = rules.spec(axes, v.shape)
+    return out
+
+
+def cache_pspecs(cache_tree, rules: Rules):
+    flat = jax.tree_util.tree_flatten_with_path(cache_tree)[0]
+    treedef = jax.tree_util.tree_structure(cache_tree)
+    specs = []
+    for path, leaf in flat:
+        name = str(getattr(path[-1], "key", path[-1]))
+        axes = CACHE_AXES.get(name, (None,) * leaf.ndim)
+        axes = tuple(axes)[: leaf.ndim]
+        if len(axes) < leaf.ndim:
+            axes = axes + (None,) * (leaf.ndim - len(axes))
+        specs.append(rules.spec(axes, leaf.shape))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def _bind_rules(fn, rules: Optional[Rules]):
+    """Make logical-axis ``shard()`` constraints active while ``fn`` is
+    *traced* (tracing happens at ``.lower()`` time, which may be outside
+    any ``use_rules`` block)."""
+    if rules is None:
+        return fn
+
+    @functools.wraps(fn)
+    def inner(*a, **k):
+        with use_rules(rules):
+            return fn(*a, **k)
+
+    return inner
+
+
+# ------------------------------------------------------------------ steps
+def make_train_step(cfg: ModelConfig, opt_cfg: OptConfig,
+                    unroll: bool = False, remat: bool = True,
+                    lr_schedule=None, microbatches: int = 1):
+    """``microbatches > 1`` splits the batch and accumulates grads over a
+    python loop (activation memory / microbatches; flops stay visible to
+    HLO cost analysis, unlike a lax.scan accumulation)."""
+    def train_step(params, opt_state, batch):
+        def loss_fn(p, b):
+            return transformer.loss(p, cfg, b, unroll=unroll, remat=remat)
+
+        if microbatches > 1:
+            B = jax.tree_util.tree_leaves(batch)[0].shape[0]
+            assert B % microbatches == 0, (B, microbatches)
+            mb = B // microbatches
+            loss_val = 0.0
+            grads = None
+            for i in range(microbatches):
+                sub = jax.tree.map(lambda t: t[i * mb:(i + 1) * mb], batch)
+                l, g = jax.value_and_grad(loss_fn)(params, sub)
+                g = jax.tree.map(lambda t: t.astype(jnp.float32) / microbatches, g)
+                grads = g if grads is None else jax.tree.map(
+                    jnp.add, grads, g)
+                loss_val = loss_val + l / microbatches
+        else:
+            loss_val, grads = jax.value_and_grad(loss_fn)(params, batch)
+        lr = lr_schedule(opt_state["step"]) if lr_schedule else None
+        new_params, new_opt, gnorm = opt_update(grads, opt_state, params,
+                                                opt_cfg, lr=lr)
+        return new_params, new_opt, {"loss": loss_val, "grad_norm": gnorm}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, unroll: bool = False):
+    def prefill_step(params, batch):
+        logits = transformer.forward(params, cfg, batch, unroll=unroll,
+                                     remat=False)
+        return logits[:, -1]
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, unroll: bool = False):
+    def serve_step(params, batch, cache, pos):
+        logits, new_cache = transformer.decode_step(params, cfg, batch, cache,
+                                                    pos, unroll=unroll)
+        return logits[:, -1], new_cache
+
+    return serve_step
+
+
+# ------------------------------------------------------------ cell builder
+def build_cell(cfg: ModelConfig, shape: InputShape, rules: Rules,
+               opt_cfg: Optional[OptConfig] = None, unroll: bool = False,
+               remat: bool = True, dtype=jnp.bfloat16,
+               microbatches: int = 1):
+    """Return (jitted_fn, example_args as ShapeDtypeStructs) for one cell,
+    with in/out shardings resolved under ``rules``."""
+    mesh = rules.mesh
+    if opt_cfg is None:
+        big = cfg.param_count()[0] > 50e9
+        opt_cfg = OptConfig(factored=big,
+                            m_dtype=jnp.bfloat16 if big else jnp.float32)
+
+    with use_rules(rules):
+        pshapes = jax.eval_shape(
+            lambda: transformer.init_params(jax.random.PRNGKey(0), cfg, dtype))
+        pspecs = param_pspecs(pshapes, rules)
+        pshard = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                              is_leaf=lambda x: isinstance(x, P))
+        specs = input_specs(cfg, shape, dtype)
+        bspecs = batch_pspec(rules, specs)
+        bshard = {k: NamedSharding(mesh, s) for k, s in bspecs.items()}
+
+        if shape.kind == "train":
+            oshapes = jax.eval_shape(lambda: opt_init(pshapes, opt_cfg))
+            ospecs = param_pspecs_for_opt(oshapes, pspecs)
+            oshard = jax.tree.map(lambda s: NamedSharding(mesh, s), ospecs,
+                                  is_leaf=lambda x: isinstance(x, P))
+            fn = _bind_rules(
+                make_train_step(cfg, opt_cfg, unroll=unroll, remat=remat,
+                                microbatches=microbatches),
+                rules)
+            jitted = jax.jit(
+                fn,
+                in_shardings=(pshard, oshard, bshard),
+                out_shardings=(pshard, oshard, None),
+                donate_argnums=(0, 1),
+            )
+            args = (pshapes, oshapes, specs)
+        elif shape.kind == "prefill":
+            fn = _bind_rules(make_prefill_step(cfg, unroll=unroll), rules)
+            jitted = jax.jit(fn, in_shardings=(pshard, bshard),
+                             out_shardings=None)
+            args = (pshapes, specs)
+        else:  # decode
+            cshapes = jax.eval_shape(
+                lambda: transformer.init_cache(cfg, shape.global_batch,
+                                               shape.seq_len, dtype))
+            cspecs = cache_pspecs(cshapes, rules)
+            cshard = jax.tree.map(lambda s: NamedSharding(mesh, s), cspecs,
+                                  is_leaf=lambda x: isinstance(x, P))
+            fn = _bind_rules(make_decode_step(cfg, unroll=unroll), rules)
+            jitted = jax.jit(
+                fn,
+                in_shardings=(pshard, bshard, cshard, None),
+                out_shardings=(None, cshard),
+                donate_argnums=(2,),
+            )
+            pos = jax.ShapeDtypeStruct((), jnp.int32)
+            args = (pshapes, specs, cshapes, pos)
+    return jitted, args
+
+
+def param_pspecs_for_opt(opt_shapes, pspecs):
+    """Optimizer leaves inherit the param spec when shapes match (m, v);
+    factored vr/vc drop the factored dim's axis; scalars replicate."""
+    def match(path_spec, leaf):
+        return path_spec
+
+    # opt_shapes = {"step": (), "leaves": tree-of-{m,v|vr,vc}}
+    import jax.tree_util as jtu
+
+    def leaf_specs(param_spec, state):
+        out = {}
+        for k, s in state.items():
+            if s.ndim == len(param_spec):
+                out[k] = param_spec
+            else:
+                out[k] = P(*([None] * s.ndim))
+        return out
+
+    leaves = jax.tree.map(
+        leaf_specs, pspecs, opt_shapes["leaves"],
+        is_leaf=lambda x: isinstance(x, P))
+    return {"step": P(), "leaves": leaves}

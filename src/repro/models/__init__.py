@@ -1,0 +1,2 @@
+from . import attention, layers, mamba2, mla, moe
+from .transformer import decode_step, forward, init_cache, init_params, loss

@@ -1,0 +1,159 @@
+"""GQA/MQA attention: dense, blockwise-flash, and single-token decode paths.
+
+Path selection:
+  * ``dense``  — full-matrix attention; exact HLO flops; used for short
+    sequences (train_4k) and smoke tests.
+  * ``flash``  — online-softmax over KV blocks via ``lax.scan``; used to
+    lower long-context prefill with flash-like memory behaviour.  NOTE:
+    XLA:CPU ``cost_analysis`` counts scan bodies once, so cells lowering
+    this path get their flops corrected analytically (see
+    ``distributed.costs``); the Pallas kernel in ``kernels/flash_attention``
+    is the TPU execution path and is validated against ``ref.py``.
+  * ``decode`` — one new token against a KV cache.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import shard, tp_row_matmul
+from .layers import _init_dense, apply_rope
+
+NEG_INF = -1e30
+
+
+def attention_init(key, d_model: int, n_heads: int, n_kv_heads: int,
+                   head_dim: int, dtype) -> dict:
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": _init_dense(ks[0], d_model, n_heads * head_dim, dtype),
+        "wk": _init_dense(ks[1], d_model, n_kv_heads * head_dim, dtype),
+        "wv": _init_dense(ks[2], d_model, n_kv_heads * head_dim, dtype),
+        "wo": _init_dense(ks[3], n_heads * head_dim, d_model, dtype),
+    }
+
+
+def _project_qkv(params, x, n_heads, n_kv_heads, head_dim, positions,
+                 rope_theta, rope_fraction):
+    B, S, _ = x.shape
+    wq = shard(params["wq"], None, "heads")       # gather fsdp dim on use
+    wk = shard(params["wk"], None, "kv_heads")
+    wv = shard(params["wv"], None, "kv_heads")
+    q = (x @ wq).reshape(B, S, n_heads, head_dim)
+    k = (x @ wk).reshape(B, S, n_kv_heads, head_dim)
+    v = (x @ wv).reshape(B, S, n_kv_heads, head_dim)
+    q = shard(q, "batch", None, "heads", None)
+    k = shard(k, "batch", None, "kv_heads", None)
+    v = shard(v, "batch", None, "kv_heads", None)
+    if rope_theta:
+        q = apply_rope(q, positions, rope_theta, rope_fraction)
+        k = apply_rope(k, positions, rope_theta, rope_fraction)
+    return q, k, v
+
+
+def _group_heads(q, n_kv_heads):
+    """(B,S,H,dh) -> (B,S,KV,G,dh) splitting query heads into KV groups."""
+    B, S, H, dh = q.shape
+    return q.reshape(B, S, n_kv_heads, H // n_kv_heads, dh)
+
+
+def dense_attention(q, k, v, causal: bool = True,
+                    q_offset: int = 0) -> jnp.ndarray:
+    """Full-matrix grouped attention.  q (B,S,KV,G,dh), k/v (B,T,KV,dh)."""
+    scale = q.shape[-1] ** -0.5
+    scores = jnp.einsum("bskgd,btkd->bkgst", q, k).astype(jnp.float32) * scale
+    if causal:
+        S, T = scores.shape[-2], scores.shape[-1]
+        qpos = jnp.arange(S)[:, None] + q_offset
+        mask = qpos >= jnp.arange(T)[None, :]
+        scores = jnp.where(mask, scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bkgst,btkd->bskgd", w, v)
+
+
+def flash_attention_scan(q, k, v, block_k: int = 1024,
+                         causal: bool = True) -> jnp.ndarray:
+    """Online-softmax over KV blocks (lax.scan).  q (B,S,KV,G,dh)."""
+    B, S, KV, G, dh = q.shape
+    dv = v.shape[-1]                      # may differ from dh (MLA)
+    T = k.shape[1]
+    scale = dh ** -0.5
+    nblk = -(-T // block_k)
+    pad = nblk * block_k - T
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kb = k.reshape(B, nblk, block_k, KV, dh).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, nblk, block_k, KV, dv).transpose(1, 0, 2, 3, 4)
+    qpos = jnp.arange(S)[:, None]
+
+    def body(carry, inputs):
+        m, l, acc = carry
+        kblk, vblk, start = inputs
+        s = jnp.einsum("bskgd,btkd->bkgst", q, kblk).astype(jnp.float32) * scale
+        kpos = start + jnp.arange(block_k)[None, :]
+        valid = kpos < T
+        if causal:
+            valid = valid & (qpos >= kpos)
+        s = jnp.where(valid[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * alpha + p.sum(-1)
+        pv = jnp.einsum("bkgst,btkd->bkgsd", p.astype(q.dtype), vblk)
+        acc_new = acc * alpha[..., None].astype(acc.dtype) + pv.astype(acc.dtype)
+        return (m_new, l_new, acc_new), ()
+
+    m0 = jnp.full((B, KV, G, S), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, KV, G, S), jnp.float32)
+    acc0 = jnp.zeros((B, KV, G, S, dv), jnp.float32)
+    starts = jnp.arange(nblk) * block_k
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, acc0), (kb, vb, starts))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 3, 1, 2, 4).astype(q.dtype)        # (B,S,KV,G,dh)
+
+
+def attention_apply(params, x, positions, *, n_heads, n_kv_heads, head_dim,
+                    rope_theta=10_000.0, rope_fraction=1.0, causal=True,
+                    dense_threshold: int = 2048) -> jnp.ndarray:
+    """Self-attention for train/prefill.  x (B,S,D)."""
+    B, S, D = x.shape
+    q, k, v = _project_qkv(params, x, n_heads, n_kv_heads, head_dim,
+                           positions, rope_theta, rope_fraction)
+    qg = _group_heads(q, n_kv_heads)
+    if S <= dense_threshold:
+        out = dense_attention(qg, k, v, causal=causal)
+    else:
+        out = flash_attention_scan(qg, k, v, causal=causal)
+    out = out.reshape(B, S, n_heads * head_dim)
+    out = shard(tp_row_matmul(out, shard(params["wo"], "heads", None)),
+                "batch", "act_seq", None)
+    return out
+
+
+def decode_attention_apply(params, x, cache_k, cache_v, pos, *, n_heads,
+                           n_kv_heads, head_dim, rope_theta=10_000.0,
+                           rope_fraction=1.0) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One-token decode.  x (B,1,D); cache_k/v (B,Smax,KV,dh); pos scalar
+    current length.  Returns (out (B,1,D), new_k, new_v)."""
+    B, _, D = x.shape
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k, v = _project_qkv(params, x, n_heads, n_kv_heads, head_dim,
+                           positions, rope_theta, rope_fraction)
+    cache_k = jax.lax.dynamic_update_slice(cache_k, k.astype(cache_k.dtype),
+                                           (0, pos, 0, 0))
+    cache_v = jax.lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype),
+                                           (0, pos, 0, 0))
+    qg = _group_heads(q, n_kv_heads)                 # (B,1,KV,G,dh)
+    scale = head_dim ** -0.5
+    s = jnp.einsum("bskgd,btkd->bkgst", qg,
+                   cache_k.astype(qg.dtype)).astype(jnp.float32) * scale
+    tpos = jnp.arange(cache_k.shape[1])[None, :]
+    s = jnp.where((tpos <= pos)[None, None, None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1).astype(qg.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", w, cache_v.astype(qg.dtype))
+    out = out.reshape(B, 1, n_heads * head_dim) @ shard(params["wo"],
+                                                        "heads", None)
+    return shard(out, "batch", None, None), cache_k, cache_v

@@ -1,0 +1,140 @@
+"""Shared building blocks for the decoder zoo.
+
+Everything is functional: ``*_init(key, cfg) -> params`` (pure jax, safe
+under ``jax.eval_shape`` so the dry-run never allocates) and
+``*_apply(params, x, ...)``.  Compute dtype is bf16 with fp32 norms/softmax;
+parameter dtype is configurable.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import shard as _shard
+from ..distributed.sharding import tp_row_matmul as _tp_row
+
+
+def _init_dense(key, in_dim: int, out_dim: int, dtype, scale: float = 1.0):
+    std = scale / math.sqrt(in_dim)
+    return (jax.random.normal(key, (in_dim, out_dim), jnp.float32) * std).astype(dtype)
+
+
+# ----------------------------------------------------------------- norms
+def rmsnorm_init(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ----------------------------------------------------------------- rope
+def rope_frequencies(head_dim: int, theta: float, fraction: float = 1.0):
+    rot = int(head_dim * fraction) // 2 * 2
+    inv = 1.0 / (theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot))
+    return inv, rot
+
+
+def apply_rope(x, positions, theta: float, fraction: float = 1.0):
+    """x: (..., S, H, dh); positions: (..., S).  Rotates the leading
+    ``fraction`` of the head dim (partial rotary for stablelm/chatglm)."""
+    dh = x.shape[-1]
+    inv, rot = rope_frequencies(dh, theta, fraction)
+    if rot == 0:
+        return x
+    ang = positions[..., :, None].astype(jnp.float32) * inv        # (..., S, rot/2)
+    cos = jnp.cos(ang)[..., :, None, :]
+    sin = jnp.sin(ang)[..., :, None, :]
+    xr = x[..., :rot].astype(jnp.float32)
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    yr = jnp.stack([y1, y2], axis=-1).reshape(*x1.shape[:-1], rot)
+    return jnp.concatenate([yr.astype(x.dtype), x[..., rot:]], axis=-1)
+
+
+# ----------------------------------------------------------------- embed
+def embedding_init(key, vocab: int, d: int, dtype) -> dict:
+    tbl = jax.random.normal(key, (vocab, d), jnp.float32).astype(dtype)
+    return {"table": tbl}
+
+
+def embedding_lookup(params, tokens):
+    table = _shard(params["table"], "vocab", None)     # gather fsdp dim
+    out = jnp.take(table, tokens, axis=0)
+    return _shard(out, "batch", None, None)
+
+
+def unembed(params, x, softcap: float = 0.0):
+    table = _shard(params["table"], "vocab", None)
+    logits = jnp.einsum("bsd,vd->bsv", x, table).astype(jnp.float32)
+    if softcap:
+        logits = jnp.tanh(logits / softcap) * softcap
+    return _shard(logits, "batch", "act_seq", "vocab")
+
+
+def lm_head_init(key, d: int, vocab: int, dtype) -> dict:
+    return {"w": _init_dense(key, d, vocab, dtype)}
+
+
+def lm_head_apply(params, x, softcap: float = 0.0):
+    logits = (x @ _shard(params["w"], None, "vocab")).astype(jnp.float32)
+    if softcap:
+        logits = jnp.tanh(logits / softcap) * softcap
+    return _shard(logits, "batch", "act_seq", "vocab")
+
+
+# ----------------------------------------------------------------- ffn
+def ffn_init(key, d: int, f: int, glu: bool, dtype) -> dict:
+    ks = jax.random.split(key, 3)
+    p = {"w_up": _init_dense(ks[0], d, f, dtype),
+         "w_down": _init_dense(ks[1], f, d, dtype)}
+    if glu:
+        p["w_gate"] = _init_dense(ks[2], d, f, dtype)
+    return p
+
+
+def _act(name: str):
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return jax.nn.gelu
+    if name == "relu2":
+        return lambda x: jnp.square(jax.nn.relu(x))
+    raise ValueError(name)
+
+
+def ffn_apply(params, x, act: str, glu: bool):
+    # ZeRO-3 "gather-on-use": weights are *stored* fsdp-sharded over data;
+    # constraining the use-site to (None, mlp) makes GSPMD emit a small
+    # weight all-gather instead of partial-sum all-reducing the (B,S,F)
+    # activation (measured 40x wire difference on nemotron-340b).
+    w_up = _shard(params["w_up"], None, "mlp")
+    up = x @ w_up
+    up = _shard(up, "batch", None, "mlp")
+    if glu:
+        gate = _shard(x @ _shard(params["w_gate"], None, "mlp"),
+                      "batch", None, "mlp")
+        h = _act(act)(gate) * up
+    else:
+        h = _act(act)(up)
+    out = _tp_row(h, _shard(params["w_down"], "mlp", None))
+    return _shard(out, "batch", "act_seq", None)
+
+
+# ----------------------------------------------------------------- losses
+def softmax_cross_entropy(logits, labels, mask=None):
+    """logits (B,S,V) fp32, labels (B,S) int32 -> scalar mean nll."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()

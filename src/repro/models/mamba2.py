@@ -1,0 +1,201 @@
+"""Mamba2 block via SSD (state-space duality), TPU-adapted.
+
+The chunked algorithm is fully *vectorized*: intra-chunk terms are batched
+einsums over (batch, n_chunks, chunk, heads, ...) and the inter-chunk state
+recurrence uses ``jax.lax.associative_scan`` (log-depth combines — every
+flop visible to HLO cost analysis, MXU-friendly shapes).  A Pallas kernel
+for the chunk core lives in ``kernels/ssd``.
+
+Decode is the O(1)-per-token recurrent update on the (H, P, N) state, which
+is what makes the 500k-context cells runnable for ssm/hybrid archs.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import SSMConfig
+from ..distributed.sharding import shard
+from .layers import _init_dense, rmsnorm
+
+
+def mamba2_init(key, d_model: int, cfg: SSMConfig, dtype) -> dict:
+    d_in = cfg.expand * d_model
+    n_heads = d_in // cfg.head_dim
+    gn = cfg.n_groups * cfg.d_state
+    conv_ch = d_in + 2 * gn
+    ks = jax.random.split(key, 8)
+    return {
+        "w_z": _init_dense(ks[0], d_model, d_in, dtype),
+        "w_x": _init_dense(ks[1], d_model, d_in, dtype),
+        "w_B": _init_dense(ks[2], d_model, gn, dtype),
+        "w_C": _init_dense(ks[3], d_model, gn, dtype),
+        "w_dt": _init_dense(ks[4], d_model, n_heads, dtype),
+        "dt_bias": jnp.zeros((n_heads,), dtype),
+        "A_log": jnp.zeros((n_heads,), jnp.float32),
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "conv": (jax.random.normal(ks[5], (cfg.conv_width, conv_ch),
+                                   jnp.float32) / cfg.conv_width).astype(dtype),
+        "norm": {"scale": jnp.ones((d_in,), dtype)},
+        "out_proj": _init_dense(ks[6], d_in, d_model, dtype),
+    }
+
+
+def _causal_conv(x, w):
+    """Depthwise causal conv via explicit shifts.  x (B,S,C), w (W,C)."""
+    W = w.shape[0]
+    out = x * w[W - 1]
+    for i in range(1, W):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, : x.shape[1]]
+        out = out + shifted * w[W - 1 - i]
+    return out
+
+
+def _ssd_chunked(xh, dt, dA, B_, C_, chunk: int):
+    """Chunked SSD core.
+
+    xh (B,S,H,P)  inputs per head
+    dt (B,S,H)    softplus step sizes
+    dA (B,S,H)    dt * A  (negative)
+    B_ (B,S,G,N)  input projections  (G groups broadcast over H)
+    C_ (B,S,G,N)  output projections
+    -> y (B,S,H,P)
+    """
+    B, S, H, P = xh.shape
+    G, N = B_.shape[-2], B_.shape[-1]
+    nc = S // chunk
+    rep = H // G
+
+    def chunks(t, extra=()):
+        return t.reshape(t.shape[0], nc, chunk, *t.shape[2:])
+
+    xc = chunks(xh)                              # (B,nc,Q,H,P)
+    dtc = chunks(dt)                             # (B,nc,Q,H)
+    dAc = chunks(dA)                             # (B,nc,Q,H)
+    Bc = jnp.repeat(chunks(B_), rep, axis=-2)    # (B,nc,Q,H,N)
+    Cc = jnp.repeat(chunks(C_), rep, axis=-2)
+
+    # Cumulative within-chunk log decay.
+    l = jnp.cumsum(dAc, axis=2)                  # (B,nc,Q,H)
+    l_last = l[:, :, -1]                         # (B,nc,H)
+
+    # --- intra-chunk (quadratic in chunk length, attention-like)
+    # decay(i,j) = exp(l_i - l_j) for i >= j
+    diff = l[:, :, :, None, :] - l[:, :, None, :, :]        # (B,nc,Qi,Qj,H)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    decay = jnp.where(mask[None, None, :, :, None], jnp.exp(diff), 0.0)
+    scores = jnp.einsum("bcihn,bcjhn->bcijh", Cc, Bc)        # (B,nc,Qi,Qj,H)
+    w = scores * decay * dtc[:, :, None, :, :]
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", w.astype(xc.dtype), xc)
+
+    # --- chunk summary states: S_c = sum_j exp(l_last - l_j) dt_j B_j x_j^T
+    sdec = jnp.exp(l_last[:, :, None] - l)                   # (B,nc,Q,H)
+    states = jnp.einsum("bcjh,bcjhn,bcjhp->bchnp",
+                        (sdec * dtc).astype(xc.dtype), Bc, xc)
+
+    # --- inter-chunk recurrence via associative scan over chunks:
+    #     H_c = exp(l_last_c) * H_{c-1} + S_c
+    a = jnp.exp(l_last).astype(jnp.float32)                  # (B,nc,H)
+    s = states.astype(jnp.float32)
+
+    def combine(x1, x2):
+        a1, s1 = x1
+        a2, s2 = x2
+        return a1 * a2, s1 * a2[..., None, None] + s2
+
+    a_acc, h_acc = jax.lax.associative_scan(combine, (a, s), axis=1)
+    # State *entering* chunk c is h_acc[c-1]; chunk 0 enters with zeros.
+    h_prev = jnp.concatenate(
+        [jnp.zeros_like(h_acc[:, :1]), h_acc[:, :-1]], axis=1)
+
+    # --- inter-chunk contribution: y_i += C_i . (exp(l_i) * H_prev)
+    y_inter = jnp.einsum("bcihn,bchnp->bcihp",
+                         Cc.astype(jnp.float32),
+                         h_prev) * jnp.exp(l)[..., None]
+    y = y_intra.astype(jnp.float32) + y_inter
+    return y.reshape(B, S, H, P)
+
+
+def mamba2_apply(params, u, cfg: SSMConfig) -> jnp.ndarray:
+    """Full-sequence SSD block.  u (B,S,D) -> (B,S,D)."""
+    B, S, D = u.shape
+    d_in = cfg.expand * D
+    H = d_in // cfg.head_dim
+    gn = cfg.n_groups * cfg.d_state
+    z = u @ shard(params["w_z"], None, "heads")
+    xBC = jnp.concatenate(
+        [u @ shard(params["w_x"], None, "heads"),
+         u @ shard(params["w_B"], None, None),
+         u @ shard(params["w_C"], None, None)], axis=-1)
+    xBC = jax.nn.silu(_causal_conv(xBC, params["conv"]))
+    x = shard(xBC[..., :d_in], "batch", None, "heads")
+    B_ = xBC[..., d_in: d_in + gn].reshape(B, S, cfg.n_groups, cfg.d_state)
+    C_ = xBC[..., d_in + gn:].reshape(B, S, cfg.n_groups, cfg.d_state)
+    dt = jax.nn.softplus(
+        (u @ params["w_dt"]).astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"])                            # (H,) negative
+    dA = dt * A
+    xh = x.reshape(B, S, H, cfg.head_dim)
+    # Pad the sequence to a chunk multiple (appended steps are causal-safe).
+    pad = (-S) % cfg.chunk
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        dA = jnp.pad(dA, ((0, 0), (0, pad), (0, 0)))
+        B_ = jnp.pad(B_, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C_ = jnp.pad(C_, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    y = _ssd_chunked(xh, dt, dA, B_, C_, cfg.chunk)[:, :S]
+    xh = xh[:, :S]
+    y = y + params["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(B, S, d_in).astype(u.dtype)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(params["norm"], y)
+    return shard(y @ shard(params["out_proj"], "heads", None),
+                 "batch", "act_seq", None)
+
+
+def mamba2_decode_init_cache(batch: int, d_model: int, cfg: SSMConfig, dtype):
+    d_in = cfg.expand * d_model
+    H = d_in // cfg.head_dim
+    gn = cfg.n_groups * cfg.d_state
+    return {
+        "state": jnp.zeros((batch, H, cfg.head_dim, cfg.d_state), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, d_in + 2 * gn), dtype),
+    }
+
+
+def mamba2_decode_apply(params, u, cache, cfg: SSMConfig
+                        ) -> Tuple[jnp.ndarray, dict]:
+    """One-token recurrent update.  u (B,1,D)."""
+    B, _, D = u.shape
+    d_in = cfg.expand * D
+    H = d_in // cfg.head_dim
+    gn = cfg.n_groups * cfg.d_state
+    z = u @ params["w_z"]
+    xBC_t = jnp.concatenate(
+        [u @ params["w_x"], u @ params["w_B"], u @ params["w_C"]], axis=-1)
+    window = jnp.concatenate([cache["conv"], xBC_t], axis=1)  # (B,W,C)
+    conv_out = (window * params["conv"][None]).sum(axis=1, keepdims=True)
+    xBC = jax.nn.silu(conv_out)
+    x = xBC[..., :d_in].reshape(B, H, cfg.head_dim)
+    B_ = xBC[..., d_in: d_in + gn].reshape(B, cfg.n_groups, cfg.d_state)
+    C_ = xBC[..., d_in + gn:].reshape(B, cfg.n_groups, cfg.d_state)
+    rep = H // cfg.n_groups
+    Bh = jnp.repeat(B_, rep, axis=1)                          # (B,H,N)
+    Ch = jnp.repeat(C_, rep, axis=1)
+    dt = jax.nn.softplus(
+        (u[:, 0] @ params["w_dt"]).astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"])
+    a = jnp.exp(dt * A)                                       # (B,H)
+    state = cache["state"] * a[..., None, None] + jnp.einsum(
+        "bh,bhn,bhp->bhpn", dt, Bh.astype(jnp.float32), x.astype(jnp.float32))
+    y = jnp.einsum("bhpn,bhn->bhp", state, Ch.astype(jnp.float32))
+    y = y + params["D"][None, :, None] * x.astype(jnp.float32)
+    y = y.reshape(B, 1, d_in).astype(u.dtype) * jax.nn.silu(z)
+    y = rmsnorm(params["norm"], y)
+    out = shard(y @ params["out_proj"], "batch", None, None)
+    new_cache = {"state": state, "conv": window[:, 1:]}
+    return out, new_cache

@@ -1,0 +1,120 @@
+"""Multi-head Latent Attention (DeepSeek V2/V3).
+
+Prefill/train use the decompressed form (per-head K/V up-projections);
+decode uses the *absorbed* form against the compressed cache
+(c_kv: kv_lora_rank + rope dims per token), which is MLA's serving win —
+the KV cache is rank-512+64 regardless of head count.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import MLAConfig
+from ..distributed.sharding import shard, tp_row_matmul
+from .attention import dense_attention, flash_attention_scan
+from .layers import _init_dense, apply_rope, rmsnorm, rmsnorm_init
+
+
+def mla_init(key, d_model: int, n_heads: int, mla: MLAConfig, dtype) -> dict:
+    ks = jax.random.split(key, 8)
+    qk_head = mla.qk_nope_head_dim + mla.qk_rope_head_dim
+    p = {}
+    if mla.q_lora_rank:
+        p["w_dq"] = _init_dense(ks[0], d_model, mla.q_lora_rank, dtype)
+        p["q_norm"] = rmsnorm_init(mla.q_lora_rank, dtype)
+        p["w_uq"] = _init_dense(ks[1], mla.q_lora_rank, n_heads * qk_head, dtype)
+    else:
+        p["w_uq"] = _init_dense(ks[1], d_model, n_heads * qk_head, dtype)
+    p["w_dkv"] = _init_dense(ks[2], d_model,
+                             mla.kv_lora_rank + mla.qk_rope_head_dim, dtype)
+    p["kv_norm"] = rmsnorm_init(mla.kv_lora_rank, dtype)
+    p["w_uk"] = _init_dense(ks[3], mla.kv_lora_rank,
+                            n_heads * mla.qk_nope_head_dim, dtype)
+    p["w_uv"] = _init_dense(ks[4], mla.kv_lora_rank,
+                            n_heads * mla.v_head_dim, dtype)
+    p["wo"] = _init_dense(ks[5], n_heads * mla.v_head_dim, d_model, dtype)
+    return p
+
+
+def _queries(params, x, n_heads: int, mla: MLAConfig, positions):
+    B, S, _ = x.shape
+    qk_head = mla.qk_nope_head_dim + mla.qk_rope_head_dim
+    w_uq = shard(params["w_uq"], None, "heads")
+    if mla.q_lora_rank:
+        cq = rmsnorm(params["q_norm"], x @ shard(params["w_dq"], None, None))
+        q = (cq @ w_uq).reshape(B, S, n_heads, qk_head)
+    else:
+        q = (x @ w_uq).reshape(B, S, n_heads, qk_head)
+    q = shard(q, "batch", None, "heads", None)
+    q_nope = q[..., : mla.qk_nope_head_dim]
+    q_rope = apply_rope(q[..., mla.qk_nope_head_dim:], positions, 10_000.0)
+    return q_nope, q_rope
+
+
+def _compressed_kv(params, x, mla: MLAConfig, positions):
+    ckv = x @ shard(params["w_dkv"], None, None)
+    c = rmsnorm(params["kv_norm"], ckv[..., : mla.kv_lora_rank])
+    k_rope = ckv[..., mla.kv_lora_rank:][:, :, None, :]        # (B,S,1,rope)
+    k_rope = apply_rope(k_rope, positions, 10_000.0)[:, :, 0]
+    return c, k_rope
+
+
+def mla_apply(params, x, positions, *, n_heads: int, mla: MLAConfig,
+              dense_threshold: int = 2048) -> jnp.ndarray:
+    """Decompressed-form MLA for train/prefill.  x (B,S,D)."""
+    B, S, D = x.shape
+    q_nope, q_rope = _queries(params, x, n_heads, mla, positions)
+    c, k_rope = _compressed_kv(params, x, mla, positions)
+    k_nope = (c @ shard(params["w_uk"], None, "heads")
+              ).reshape(B, S, n_heads, mla.qk_nope_head_dim)
+    v = (c @ shard(params["w_uv"], None, "heads")
+         ).reshape(B, S, n_heads, mla.v_head_dim)
+    k_nope = shard(k_nope, "batch", None, "heads", None)
+    v = shard(v, "batch", None, "heads", None)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                  (B, S, n_heads, mla.qk_rope_head_dim))],
+        axis=-1)
+    # Grouped layout with KV == heads (MLA decompresses to per-head K/V).
+    qg = q[:, :, :, None, :]
+    if S <= dense_threshold:
+        out = dense_attention(qg, k, v, causal=True)
+    else:
+        out = flash_attention_scan(qg, k, v, causal=True)
+    out = out.reshape(B, S, n_heads * mla.v_head_dim)
+    return shard(tp_row_matmul(out, shard(params["wo"], "heads", None)),
+                 "batch", "act_seq", None)
+
+
+def mla_decode_apply(params, x, cache_c, cache_rope, pos, *, n_heads: int,
+                     mla: MLAConfig) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Absorbed-form decode.  cache_c (B,Smax,kv_lora), cache_rope
+    (B,Smax,rope).  Scores: q_nope W_uk^T c  +  q_rope k_rope."""
+    B = x.shape[0]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q_nope, q_rope = _queries(params, x, n_heads, mla, positions)
+    c, k_rope = _compressed_kv(params, x, mla, positions)
+    cache_c = jax.lax.dynamic_update_slice(cache_c, c.astype(cache_c.dtype),
+                                           (0, pos, 0))
+    cache_rope = jax.lax.dynamic_update_slice(
+        cache_rope, k_rope.astype(cache_rope.dtype), (0, pos, 0))
+    # Absorb W_uk into the query:  (B,1,H,nope) @ (lora, H*nope) -> (B,H,lora)
+    w_uk = params["w_uk"].reshape(mla.kv_lora_rank, n_heads,
+                                  mla.qk_nope_head_dim)
+    q_abs = jnp.einsum("bshn,lhn->bhl", q_nope, w_uk)
+    scale = (mla.qk_nope_head_dim + mla.qk_rope_head_dim) ** -0.5
+    s = (jnp.einsum("bhl,btl->bht", q_abs, cache_c.astype(q_abs.dtype))
+         + jnp.einsum("bshr,btr->bht", q_rope,
+                      cache_rope.astype(q_rope.dtype)))
+    s = s.astype(jnp.float32) * scale
+    tpos = jnp.arange(cache_c.shape[1])[None, None, :]
+    s = jnp.where(tpos <= pos, s, -1e30)
+    w = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+    ctx = jnp.einsum("bht,btl->bhl", w, cache_c.astype(x.dtype))
+    w_uv = params["w_uv"].reshape(mla.kv_lora_rank, n_heads, mla.v_head_dim)
+    out = jnp.einsum("bhl,lhv->bhv", ctx, w_uv).reshape(B, 1, -1)
+    return shard(out @ params["wo"], "batch", None, None), cache_c, cache_rope

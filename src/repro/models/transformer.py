@@ -1,0 +1,397 @@
+"""Config-driven decoder stack covering all 10 assigned architectures.
+
+One generic implementation; blocks compose by ``ModelConfig``:
+  dense GQA/MQA  -> attention + (GLU or squared-ReLU) FFN
+  moe (deepseek) -> MLA attention + (dense-FFN prefix, MoE main stack)
+  ssm (mamba2)   -> SSD blocks, attention-free
+  hybrid (zamba2)-> SSD backbone + shared attention/MLP blocks cycled in
+  vlm / audio    -> same stacks with an embeddings input stub
+                    (musicgen adds parallel codebook heads)
+
+Params for homogeneous layer runs are *stacked* (leading L dim) so the
+full-depth program lowers through one ``lax.scan`` body (fast compile);
+``unroll=True`` traces a python loop instead (exact HLO cost accounting —
+used by the dry-run's L=1/L=2 extrapolation lowers and the smoke tests).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..distributed.sharding import shard
+from . import attention as attn
+from . import mamba2 as ssd
+from . import mla as mla_mod
+from . import moe as moe_mod
+from .layers import (embedding_init, embedding_lookup, ffn_apply, ffn_init,
+                     lm_head_apply, lm_head_init, rmsnorm, rmsnorm_init,
+                     softmax_cross_entropy, unembed)
+
+
+# ------------------------------------------------------------------ blocks
+def _block_init(key, cfg: ModelConfig, kind: str, dtype) -> dict:
+    ks = jax.random.split(key, 4)
+    D = cfg.d_model
+    p: Dict[str, Any] = {"norm1": rmsnorm_init(D, dtype)}
+    if kind == "ssm":
+        p["ssm"] = ssd.mamba2_init(ks[0], D, cfg.ssm, dtype)
+        return p
+    if cfg.mla is not None:
+        p["mla"] = mla_mod.mla_init(ks[0], D, cfg.n_heads, cfg.mla, dtype)
+    else:
+        p["attn"] = attn.attention_init(ks[0], D, cfg.n_heads, cfg.n_kv_heads,
+                                        cfg.resolved_head_dim, dtype)
+    p["norm2"] = rmsnorm_init(D, dtype)
+    if kind == "attn_moe":
+        p["moe"] = moe_mod.moe_init(ks[1], D, cfg.moe, cfg.glu, dtype)
+    else:
+        p["mlp"] = ffn_init(ks[1], D, cfg.d_ff, cfg.glu, dtype)
+    return p
+
+
+def _shared_block_init(key, cfg: ModelConfig, dtype) -> dict:
+    """Zamba2 shared attention+MLP block."""
+    h = cfg.hybrid
+    ks = jax.random.split(key, 3)
+    dh = cfg.d_model // h.shared_n_heads
+    return {
+        "norm1": rmsnorm_init(cfg.d_model, dtype),
+        "attn": attn.attention_init(ks[0], cfg.d_model, h.shared_n_heads,
+                                    h.shared_n_kv_heads, dh, dtype),
+        "norm2": rmsnorm_init(cfg.d_model, dtype),
+        "shared": ffn_init(ks[1], cfg.d_model, h.shared_d_ff, cfg.glu, dtype),
+    }
+
+
+def _block_apply(params, cfg: ModelConfig, kind: str, x, positions):
+    # Sequence-parallel residual stream under "opt" rules (S over model);
+    # no-op under baseline rules or when S doesn't divide.
+    x = shard(x, "batch", "act_seq", None)
+    if kind == "ssm":
+        x = x + ssd.mamba2_apply(params["ssm"], rmsnorm(params["norm1"], x,
+                                                        cfg.norm_eps),
+                                 cfg.ssm)
+        return shard(x, "batch", "act_seq", None)
+    h = rmsnorm(params["norm1"], x, cfg.norm_eps)
+    if cfg.mla is not None:
+        a = mla_mod.mla_apply(params["mla"], h, positions,
+                              n_heads=cfg.n_heads, mla=cfg.mla)
+    else:
+        a = attn.attention_apply(params["attn"], h, positions,
+                                 n_heads=cfg.n_heads,
+                                 n_kv_heads=cfg.n_kv_heads,
+                                 head_dim=cfg.resolved_head_dim,
+                                 rope_theta=cfg.rope_theta,
+                                 rope_fraction=cfg.rope_fraction)
+    x = shard(x + a, "batch", "act_seq", None)
+    h = rmsnorm(params["norm2"], x, cfg.norm_eps)
+    if kind == "attn_moe":
+        f = moe_mod.moe_apply(params["moe"], h, cfg.moe, cfg.act, cfg.glu)
+    else:
+        f = ffn_apply(params["mlp"], h, cfg.act, cfg.glu)
+    return shard(x + f, "batch", "act_seq", None)
+
+
+def _shared_block_apply(params, cfg: ModelConfig, x, positions):
+    h = rmsnorm(params["norm1"], x, cfg.norm_eps)
+    hcfg = cfg.hybrid
+    a = attn.attention_apply(params["attn"], h, positions,
+                             n_heads=hcfg.shared_n_heads,
+                             n_kv_heads=hcfg.shared_n_kv_heads,
+                             head_dim=cfg.d_model // hcfg.shared_n_heads,
+                             rope_theta=cfg.rope_theta)
+    x = shard(x + a, "batch", "act_seq", None)
+    h = rmsnorm(params["norm2"], x, cfg.norm_eps)
+    return shard(x + ffn_apply(params["shared"], h, cfg.act, cfg.glu),
+                 "batch", "act_seq", None)
+
+
+# ------------------------------------------------------------------ stacks
+def _stack_init(key, cfg: ModelConfig, kind: str, n: int, dtype):
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: _block_init(k, cfg, kind, dtype))(keys)
+
+
+def _layer_plan(cfg: ModelConfig) -> Tuple[int, str, int, str]:
+    """(prefix_n, prefix_kind, main_n, main_kind)."""
+    if cfg.family in ("ssm", "hybrid"):
+        return 0, "", cfg.n_layers, "ssm"
+    if cfg.moe is not None:
+        p = cfg.moe.first_dense_layers
+        return p, "attn", cfg.n_layers - p, "attn_moe"
+    return 0, "", cfg.n_layers, "attn"
+
+
+def init_params(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> dict:
+    ks = jax.random.split(key, 6)
+    prefix_n, prefix_kind, main_n, main_kind = _layer_plan(cfg)
+    params: Dict[str, Any] = {
+        "embed": embedding_init(ks[0], cfg.vocab_size, cfg.d_model, dtype),
+        "final_norm": rmsnorm_init(cfg.d_model, dtype),
+    }
+    if prefix_n:
+        params["prefix"] = _stack_init(ks[1], cfg, prefix_kind, prefix_n, dtype)
+    params["stack"] = _stack_init(ks[2], cfg, main_kind, main_n, dtype)
+    if cfg.hybrid is not None:
+        skeys = jax.random.split(ks[3], cfg.hybrid.n_shared_blocks)
+        params["shared_blocks"] = [
+            _shared_block_init(k, cfg, dtype) for k in skeys]
+    if not cfg.tie_embeddings:
+        out_dim = cfg.vocab_size * cfg.n_codebooks
+        params["lm_head"] = lm_head_init(ks[4], cfg.d_model, out_dim, dtype)
+    return params
+
+
+def _tree_index(tree, i):
+    return jax.tree.map(lambda w: w[i], tree)
+
+
+def _run_stack(stack_params, cfg: ModelConfig, kind: str, x, positions,
+               n: int, unroll: bool, remat: bool):
+    body = _block_apply
+    if remat:
+        body = jax.checkpoint(
+            functools.partial(_block_apply, cfg=cfg, kind=kind),
+            static_argnums=())
+        def call(p, xx):
+            return body(p, x=xx, positions=positions)
+    else:
+        def call(p, xx):
+            return _block_apply(p, cfg, kind, xx, positions)
+    if unroll:
+        for i in range(n):
+            x = call(_tree_index(stack_params, i), x)
+        return x
+
+    def scan_body(xx, p):
+        return call(p, xx), ()
+
+    x, _ = jax.lax.scan(scan_body, x, stack_params)
+    return x
+
+
+def _hybrid_run(params, cfg: ModelConfig, x, positions, unroll: bool,
+                remat: bool):
+    """SSD backbone with shared attn blocks every ``attn_period`` layers."""
+    h = cfg.hybrid
+    L = cfg.n_layers
+    period = h.attn_period
+    stack = params["stack"]
+    i = 0
+    seg = 0
+    while i < L:
+        n = min(period, L - i)
+        seg_params = jax.tree.map(lambda w: w[i:i + n], stack)
+        x = _run_stack(seg_params, cfg, "ssm", x, positions, n, unroll, remat)
+        i += n
+        if i < L or n == period:
+            blk = params["shared_blocks"][seg % h.n_shared_blocks]
+            x = _shared_block_apply(blk, cfg, x, positions)
+            seg += 1
+    return x
+
+
+def _inputs_to_h(params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray]):
+    if cfg.input_mode == "embeddings":
+        x = batch["embeddings"].astype(params["embed"]["table"].dtype)
+        return shard(x, "batch", None, None)
+    tokens = batch["tokens"]
+    if cfg.n_codebooks > 1 and tokens.ndim == 3:
+        x = sum(embedding_lookup(params["embed"], tokens[..., c])
+                for c in range(cfg.n_codebooks))
+        return x
+    return embedding_lookup(params["embed"], tokens)
+
+
+def _logits(params, cfg: ModelConfig, x):
+    if cfg.tie_embeddings:
+        return unembed(params["embed"], x, cfg.logit_softcap)
+    logits = lm_head_apply(params["lm_head"], x, cfg.logit_softcap)
+    if cfg.n_codebooks > 1:
+        B, S, _ = logits.shape
+        logits = logits.reshape(B, S, cfg.n_codebooks, cfg.vocab_size)
+    return logits
+
+
+def forward(params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray],
+            unroll: bool = False, remat: bool = False) -> jnp.ndarray:
+    """Full-sequence forward -> logits (B,S,V[,K])."""
+    x = _inputs_to_h(params, cfg, batch)
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    prefix_n, prefix_kind, main_n, main_kind = _layer_plan(cfg)
+    if prefix_n:
+        x = _run_stack(params["prefix"], cfg, prefix_kind, x, positions,
+                       prefix_n, True, remat)
+    if cfg.family == "hybrid":
+        x = _hybrid_run(params, cfg, x, positions, unroll, remat)
+    else:
+        x = _run_stack(params["stack"], cfg, main_kind, x, positions,
+                       main_n, unroll, remat)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return _logits(params, cfg, x)
+
+
+def loss(params, cfg: ModelConfig, batch, unroll: bool = False,
+         remat: bool = True) -> jnp.ndarray:
+    logits = forward(params, cfg, batch, unroll=unroll, remat=remat)
+    labels = batch["labels"]
+    if cfg.n_codebooks > 1:
+        total = 0.0
+        for c in range(cfg.n_codebooks):
+            total = total + softmax_cross_entropy(logits[..., c, :],
+                                                  labels[..., c])
+        return total / cfg.n_codebooks
+    return softmax_cross_entropy(logits, labels)
+
+
+# ------------------------------------------------------------------ decode
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> dict:
+    """Decode cache pytree (pure shapes; safe under eval_shape)."""
+    prefix_n, prefix_kind, main_n, main_kind = _layer_plan(cfg)
+    D = cfg.d_model
+
+    def attn_cache(n_layers, kv_heads, head_dim):
+        shape = (n_layers, batch, max_len, kv_heads, head_dim)
+        return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+    cache: Dict[str, Any] = {}
+    if cfg.family in ("ssm", "hybrid"):
+        one = ssd.mamba2_decode_init_cache(batch, D, cfg.ssm, dtype)
+        cache["stack"] = jax.tree.map(
+            lambda t: jnp.broadcast_to(t[None], (main_n, *t.shape)).copy(), one)
+        if cfg.hybrid is not None:
+            h = cfg.hybrid
+            n_inv = -(-cfg.n_layers // h.attn_period)
+            dh = D // h.shared_n_heads
+            cache["shared"] = attn_cache(n_inv, h.shared_n_kv_heads, dh)
+        return cache
+    if cfg.mla is not None:
+        m = cfg.mla
+        cache["stack"] = {
+            "c": jnp.zeros((main_n, batch, max_len, m.kv_lora_rank), dtype),
+            "rope": jnp.zeros((main_n, batch, max_len, m.qk_rope_head_dim),
+                              dtype),
+        }
+        if prefix_n:
+            cache["prefix"] = {
+                "c": jnp.zeros((prefix_n, batch, max_len, m.kv_lora_rank),
+                               dtype),
+                "rope": jnp.zeros((prefix_n, batch, max_len,
+                                   m.qk_rope_head_dim), dtype),
+            }
+        return cache
+    cache["stack"] = attn_cache(main_n, cfg.n_kv_heads, cfg.resolved_head_dim)
+    return cache
+
+
+def _decode_block(params, cfg: ModelConfig, kind: str, x, layer_cache, pos):
+    if kind == "ssm":
+        h = rmsnorm(params["norm1"], x, cfg.norm_eps)
+        out, new_cache = ssd.mamba2_decode_apply(params["ssm"], h, layer_cache,
+                                                 cfg.ssm)
+        return x + out, new_cache
+    h = rmsnorm(params["norm1"], x, cfg.norm_eps)
+    if cfg.mla is not None:
+        a, c, r = mla_mod.mla_decode_apply(params["mla"], h, layer_cache["c"],
+                                           layer_cache["rope"], pos,
+                                           n_heads=cfg.n_heads, mla=cfg.mla)
+        new_cache = {"c": c, "rope": r}
+    else:
+        a, k, v = attn.decode_attention_apply(
+            params["attn"], h, layer_cache["k"], layer_cache["v"], pos,
+            n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+            head_dim=cfg.resolved_head_dim, rope_theta=cfg.rope_theta,
+            rope_fraction=cfg.rope_fraction)
+        new_cache = {"k": k, "v": v}
+    x = x + a
+    h = rmsnorm(params["norm2"], x, cfg.norm_eps)
+    if kind == "attn_moe":
+        f = moe_mod.moe_apply(params["moe"], h, cfg.moe, cfg.act, cfg.glu,
+                              n_groups=1)
+    else:
+        f = ffn_apply(params["mlp"], h, cfg.act, cfg.glu)
+    return x + f, new_cache
+
+
+def _decode_shared_block(params, cfg: ModelConfig, x, kcache, vcache, pos):
+    h = rmsnorm(params["norm1"], x, cfg.norm_eps)
+    hcfg = cfg.hybrid
+    a, k, v = attn.decode_attention_apply(
+        params["attn"], h, kcache, vcache, pos,
+        n_heads=hcfg.shared_n_heads, n_kv_heads=hcfg.shared_n_kv_heads,
+        head_dim=cfg.d_model // hcfg.shared_n_heads,
+        rope_theta=cfg.rope_theta)
+    x = shard(x + a, "batch", "act_seq", None)
+    h = rmsnorm(params["norm2"], x, cfg.norm_eps)
+    return shard(x + ffn_apply(params["shared"], h, cfg.act, cfg.glu),
+                 "batch", "act_seq", None), k, v
+
+
+def decode_step(params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray],
+                cache: dict, pos, unroll: bool = False
+                ) -> Tuple[jnp.ndarray, dict]:
+    """One-token decode.  batch: tokens (B,1)[,K] or embeddings (B,1,D).
+    ``pos`` = current cache length (index of the new token)."""
+    x = _inputs_to_h(params, cfg, batch)
+    prefix_n, prefix_kind, main_n, main_kind = _layer_plan(cfg)
+    new_cache: Dict[str, Any] = {}
+
+    if prefix_n:
+        pcaches = []
+        for i in range(prefix_n):
+            x, nc = _decode_block(_tree_index(params["prefix"], i), cfg,
+                                  prefix_kind, x,
+                                  _tree_index(cache["prefix"], i), pos)
+            pcaches.append(nc)
+        new_cache["prefix"] = jax.tree.map(
+            lambda *xs: jnp.stack(xs), *pcaches)
+
+    if cfg.family == "hybrid":
+        h = cfg.hybrid
+        L, period = cfg.n_layers, h.attn_period
+        scaches, kso, vso = [], [], []
+        i = seg = 0
+        while i < L:
+            n = min(period, L - i)
+            for j in range(i, i + n):
+                x, nc = _decode_block(_tree_index(params["stack"], j), cfg,
+                                      "ssm", x,
+                                      _tree_index(cache["stack"], j), pos)
+                scaches.append(nc)
+            i += n
+            if i < L or n == period:
+                blk = params["shared_blocks"][seg % h.n_shared_blocks]
+                x, k, v = _decode_shared_block(
+                    blk, cfg, x, cache["shared"]["k"][seg],
+                    cache["shared"]["v"][seg], pos)
+                kso.append(k)
+                vso.append(v)
+                seg += 1
+        new_cache["stack"] = jax.tree.map(lambda *xs: jnp.stack(xs), *scaches)
+        new_cache["shared"] = {"k": jnp.stack(kso), "v": jnp.stack(vso)}
+    elif unroll:
+        caches = []
+        for i in range(main_n):
+            x, nc = _decode_block(_tree_index(params["stack"], i), cfg,
+                                  main_kind, x,
+                                  _tree_index(cache["stack"], i), pos)
+            caches.append(nc)
+        new_cache["stack"] = jax.tree.map(lambda *xs: jnp.stack(xs), *caches)
+    else:
+        def body(xx, inputs):
+            p, c = inputs
+            xx, nc = _decode_block(p, cfg, main_kind, xx, c, pos)
+            return xx, nc
+
+        x, stack_cache = jax.lax.scan(body, x,
+                                      (params["stack"], cache["stack"]))
+        new_cache["stack"] = stack_cache
+
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return _logits(params, cfg, x), new_cache

@@ -1,0 +1,4 @@
+from .modules import (conv1d_apply, conv1d_init, count_params, dense_apply,
+                      dense_init, glorot_init, he_init, leaky_relu, mlp_apply,
+                      mlp_init)
+from .optim import AdamState, adam_init, adam_update

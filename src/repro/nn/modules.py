@@ -1,0 +1,97 @@
+"""Minimal neural-network library on raw JAX pytrees.
+
+Only what the MRSch agent and baselines need: dense layers, MLPs, a small
+conv stack (for the CNN state-module ablation), LeakyReLU, and He/Glorot
+initializers.  Params are plain nested dicts so they serialize with the
+checkpoint subsystem and shard with ``NamedSharding`` without a framework
+dependency.
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+Params = dict
+
+
+def he_init(key, shape, dtype=jnp.float32):
+    fan_in = shape[0] if len(shape) == 2 else math.prod(shape[:-1])
+    std = math.sqrt(2.0 / fan_in)
+    return jax.random.normal(key, shape, dtype) * std
+
+
+def glorot_init(key, shape, dtype=jnp.float32):
+    fan_in = shape[0] if len(shape) == 2 else math.prod(shape[:-1])
+    fan_out = shape[-1]
+    lim = math.sqrt(6.0 / (fan_in + fan_out))
+    return jax.random.uniform(key, shape, dtype, -lim, lim)
+
+
+def leaky_relu(x, negative_slope: float = 0.2):
+    return jnp.where(x >= 0, x, negative_slope * x)
+
+
+def dense_init(key, in_dim: int, out_dim: int, dtype=jnp.float32) -> Params:
+    wkey, _ = jax.random.split(key)
+    return {
+        "w": he_init(wkey, (in_dim, out_dim), dtype),
+        "b": jnp.zeros((out_dim,), dtype),
+    }
+
+
+def dense_apply(params: Params, x: jnp.ndarray) -> jnp.ndarray:
+    return x @ params["w"] + params["b"]
+
+
+def mlp_init(key, sizes: Sequence[int], dtype=jnp.float32) -> Params:
+    """sizes = [in, h1, ..., out]; returns {'layers': [dense, ...]}."""
+    keys = jax.random.split(key, len(sizes) - 1)
+    return {
+        "layers": [
+            dense_init(k, sizes[i], sizes[i + 1], dtype)
+            for i, k in enumerate(keys)
+        ]
+    }
+
+
+def mlp_apply(
+    params: Params,
+    x: jnp.ndarray,
+    activation: Callable = leaky_relu,
+    final_activation: Callable | None = None,
+) -> jnp.ndarray:
+    n = len(params["layers"])
+    for i, layer in enumerate(params["layers"]):
+        x = dense_apply(layer, x)
+        if i < n - 1:
+            x = activation(x)
+        elif final_activation is not None:
+            x = final_activation(x)
+    return x
+
+
+# ---------------------------------------------------------------- CNN ablation
+def conv1d_init(key, in_ch: int, out_ch: int, width: int, dtype=jnp.float32):
+    return {
+        "w": he_init(key, (width, in_ch, out_ch), dtype),
+        "b": jnp.zeros((out_ch,), dtype),
+    }
+
+
+def conv1d_apply(params: Params, x: jnp.ndarray, stride: int = 1):
+    """x: (batch, length, channels) -> (batch, length', out_channels)."""
+    out = jax.lax.conv_general_dilated(
+        x,
+        params["w"],
+        window_strides=(stride,),
+        padding="SAME",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+    )
+    return out + params["b"]
+
+
+def count_params(params) -> int:
+    return sum(int(p.size) for p in jax.tree_util.tree_leaves(params))

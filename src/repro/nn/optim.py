@@ -1,0 +1,48 @@
+"""Adam optimizer for the agent networks (small models, host-resident).
+
+The large-model optimizer (ZeRO-sharded AdamW + factored second moment)
+lives in ``repro.optim``; this one is intentionally dependency-free and
+keeps the MRSch agent self-contained.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamState(NamedTuple):
+    step: jnp.ndarray
+    mu: object
+    nu: object
+
+
+def adam_init(params) -> AdamState:
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return AdamState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                     nu=jax.tree.map(jnp.zeros_like, params))
+
+
+def adam_update(grads, state: AdamState, params, lr=1e-4, b1=0.9, b2=0.999,
+                eps=1e-8, weight_decay=0.0, grad_clip=None):
+    if grad_clip is not None:
+        gnorm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                             for g in jax.tree_util.tree_leaves(grads)))
+        scale = jnp.minimum(1.0, grad_clip / (gnorm + 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+    step = state.step + 1
+    mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads)
+    nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state.nu, grads)
+    t = step.astype(jnp.float32)
+    mu_hat_scale = 1.0 / (1 - b1 ** t)
+    nu_hat_scale = 1.0 / (1 - b2 ** t)
+
+    def upd(p, m, v):
+        u = (m * mu_hat_scale) / (jnp.sqrt(v * nu_hat_scale) + eps)
+        if weight_decay:
+            u = u + weight_decay * p
+        return p - lr * u
+
+    new_params = jax.tree.map(upd, params, mu, nu)
+    return new_params, AdamState(step=step, mu=mu, nu=nu)

@@ -1,0 +1,2 @@
+from .adamw import OptConfig, opt_init, opt_update
+from .schedule import make_schedule

@@ -1,0 +1,121 @@
+"""AdamW with ZeRO-style sharded state and a factored second moment.
+
+States inherit the parameter sharding (params are already fsdp+tensor
+sharded, so optimizer memory is fully distributed = ZeRO-3 semantics).
+For >=100B configs ``factored=True`` switches the second moment to an
+Adafactor-style row/col estimate and ``m_dtype=bf16`` halves the first
+moment, which is what lets deepseek-v3-671b fit 512 x 16 GB:
+  params bf16 1.34 TB + m bf16 1.34 TB + factored v (~MBs)  ~= 5.5 GB/chip.
+
+Gradient compression: gradients cross the wire in bf16 (model compute
+dtype — GSPMD reduce-scatters them before this module converts to f32 for
+clipping/update, so the collective payload is 2 B/element; the roofline
+counts it that way).  A further int8 + error-feedback stage would halve
+that again at the cost of an extra f32 residual buffer per parameter
+(= the memory we just saved with the factored second moment); measured
+collective shares in EXPERIMENTS §Perf show grad traffic is < 10 % of
+per-step wire for every train cell after the H1 fixes, so the trade is
+not taken — recorded as a deliberate non-optimization.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4                  # used when no schedule is passed
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    factored: bool = False            # Adafactor-style second moment
+    m_dtype: Any = jnp.float32        # bf16 for giant configs
+    min_dim_size_to_factor: int = 128
+
+
+def _factored_dims(shape):
+    """Last two dims if both are large enough (Adafactor convention)."""
+    if len(shape) < 2:
+        return None
+    if shape[-1] < 2 or shape[-2] < 2:
+        return None
+    return (len(shape) - 2, len(shape) - 1)
+
+
+def opt_init(params, cfg: OptConfig):
+    def init_leaf(p):
+        state = {"m": jnp.zeros(p.shape, cfg.m_dtype)}
+        dims = _factored_dims(p.shape) if cfg.factored else None
+        if dims is not None:
+            r, c = dims
+            vr_shape = p.shape[:r] + p.shape[r + 1:]      # drop row dim
+            vc_shape = p.shape[:c] + p.shape[c + 1:]      # drop col dim
+            state["vr"] = jnp.zeros(vr_shape, jnp.float32)
+            state["vc"] = jnp.zeros(vc_shape, jnp.float32)
+        else:
+            state["v"] = jnp.zeros(p.shape, jnp.float32)
+        return state
+
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "leaves": jax.tree.map(init_leaf, params),
+    }
+
+
+def _clip_by_global_norm(grads, max_norm):
+    gsq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+              for g in jax.tree_util.tree_leaves(grads))
+    gnorm = jnp.sqrt(gsq)
+    scale = jnp.minimum(1.0, max_norm / (gnorm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), gnorm
+
+
+def opt_update(grads, opt_state, params, cfg: OptConfig, lr=None):
+    """Returns (new_params, new_opt_state, grad_norm)."""
+    step = opt_state["step"] + 1
+    t = step.astype(jnp.float32)
+    lr = cfg.lr if lr is None else lr
+    grads, gnorm = _clip_by_global_norm(grads, cfg.grad_clip)
+
+    bc1 = 1.0 - cfg.b1 ** t
+    bc2 = 1.0 - cfg.b2 ** t
+
+    def upd(p, g, s):
+        m = cfg.b1 * s["m"].astype(jnp.float32) + (1 - cfg.b1) * g
+        new_s = {"m": m.astype(cfg.m_dtype)}
+        if "v" in s:
+            v = cfg.b2 * s["v"] + (1 - cfg.b2) * jnp.square(g)
+            new_s["v"] = v
+            denom = jnp.sqrt(v / bc2) + cfg.eps
+        else:
+            r, c = _factored_dims(p.shape)
+            g2 = jnp.square(g) + 1e-30
+            vr = cfg.b2 * s["vr"] + (1 - cfg.b2) * g2.mean(axis=r)
+            vc = cfg.b2 * s["vc"] + (1 - cfg.b2) * g2.mean(axis=c)
+            new_s["vr"], new_s["vc"] = vr, vc
+            # v_hat ~= vr (x) vc / mean(vr): rank-1 reconstruction.
+            vr_e = jnp.expand_dims(vr, r)
+            vc_e = jnp.expand_dims(vc, c)
+            mean_vr = vr.mean(axis=-1, keepdims=True)
+            mean_vr = jnp.expand_dims(mean_vr, r)
+            v = vr_e * vc_e / jnp.maximum(mean_vr, 1e-30)
+            denom = jnp.sqrt(v / bc2) + cfg.eps
+        u = (m / bc1) / denom
+        if cfg.weight_decay:
+            u = u + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+        return new_p, new_s
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_s = treedef.flatten_up_to(opt_state["leaves"])
+    out = [upd(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s)]
+    new_params = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_leaves = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    return new_params, {"step": step, "leaves": new_leaves}, gnorm

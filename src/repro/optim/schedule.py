@@ -1,0 +1,23 @@
+"""Learning-rate schedules (warmup + cosine / constant / rsqrt)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def make_schedule(kind: str = "cosine", peak: float = 3e-4,
+                  warmup_steps: int = 2000, total_steps: int = 100_000,
+                  final_frac: float = 0.1):
+    def sched(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak * jnp.minimum(step / jnp.maximum(warmup_steps, 1), 1.0)
+        if kind == "constant":
+            return warm
+        if kind == "rsqrt":
+            return warm * jnp.sqrt(
+                jnp.maximum(warmup_steps, 1.0)
+                / jnp.maximum(step, warmup_steps))
+        frac = jnp.clip((step - warmup_steps)
+                        / jnp.maximum(total_steps - warmup_steps, 1), 0, 1)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return warm * cos
+    return sched

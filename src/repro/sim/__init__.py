@@ -1,0 +1,9 @@
+from .cluster import Cluster, ResourceSpec
+from .job import Job
+from .metrics import MetricsAccumulator, ScheduleMetrics
+from .simulator import SchedContext, SimConfig, SimResult, Simulator, run_trace
+
+__all__ = [
+    "Cluster", "ResourceSpec", "Job", "MetricsAccumulator", "ScheduleMetrics",
+    "SchedContext", "SimConfig", "SimResult", "Simulator", "run_trace",
+]

@@ -1,0 +1,53 @@
+"""Job and resource-request model for the multi-resource cluster simulator."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict
+
+import numpy as np
+
+
+@dataclass
+class Job:
+    """A rigid parallel HPC job.
+
+    ``demands`` maps resource name -> requested units (integer), e.g.
+    ``{"node": 512, "bb": 40, "power": 60}``.  Burst buffer is in units
+    (default 1 TB/unit); power in kW of *incremental* draw above idle.
+    """
+
+    jid: int
+    submit: float                       # submission time (seconds)
+    runtime: float                      # actual runtime (seconds)
+    walltime: float                     # user estimate (seconds), >= runtime
+    demands: Dict[str, int] = field(default_factory=dict)
+
+    # Mutable scheduling state
+    start: float = -1.0
+    end: float = -1.0
+
+    @property
+    def started(self) -> bool:
+        return self.start >= 0.0
+
+    @property
+    def wait(self) -> float:
+        return self.start - self.submit
+
+    @property
+    def slowdown(self) -> float:
+        return (self.wait + self.runtime) / max(self.runtime, 1.0)
+
+    def bounded_slowdown(self, tau: float = 10.0) -> float:
+        return max(1.0, (self.wait + self.runtime) / max(self.runtime, tau))
+
+    def demand_fraction(self, capacities: Dict[str, int]) -> np.ndarray:
+        """P_ij of Eq. (1): requested fraction of each resource's capacity."""
+        return np.array(
+            [self.demands.get(r, 0) / max(c, 1) for r, c in capacities.items()],
+            dtype=np.float64,
+        )
+
+    def copy(self) -> "Job":
+        return Job(self.jid, self.submit, self.runtime, self.walltime,
+                   dict(self.demands))

@@ -1,0 +1,80 @@
+"""Scheduling quality metrics (paper §IV-B).
+
+1) node utilization      = used node-hours / elapsed node-hours
+2) burst-buffer util     = used BB-hours / elapsed BB-hours
+   (generalized: one utilization figure per schedulable resource)
+3) average job wait time = mean(start - submit)
+4) average job slowdown  = mean((wait + runtime) / runtime)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List
+
+import numpy as np
+
+
+@dataclass
+class ScheduleMetrics:
+    utilization: Dict[str, float]
+    avg_wait: float
+    avg_slowdown: float
+    avg_bounded_slowdown: float
+    p95_wait: float
+    max_wait: float
+    n_jobs: int
+    makespan: float
+
+    def as_row(self) -> Dict[str, float]:
+        row = {f"util_{k}": v for k, v in self.utilization.items()}
+        row.update(
+            avg_wait=self.avg_wait,
+            avg_slowdown=self.avg_slowdown,
+            avg_bounded_slowdown=self.avg_bounded_slowdown,
+            p95_wait=self.p95_wait,
+            n_jobs=self.n_jobs,
+            makespan=self.makespan,
+        )
+        return row
+
+
+class MetricsAccumulator:
+    """Integrates per-resource busy-units over simulated time."""
+
+    def __init__(self, cluster):
+        self.cluster = cluster
+        self.last_time = 0.0
+        self.busy_area: Dict[str, float] = {n: 0.0 for n in cluster.names}
+        self.start_time: float | None = None
+
+    def advance(self, new_time: float) -> None:
+        dt = new_time - self.last_time
+        if dt > 0:
+            for n in self.cluster.names:
+                busy = self.cluster.capacities[n] - self.cluster.free[n]
+                self.busy_area[n] += busy * dt
+        self.last_time = new_time
+
+    def job_started(self, job) -> None:
+        if self.start_time is None:
+            self.start_time = job.start
+
+    def summarize(self, jobs: List) -> ScheduleMetrics:
+        elapsed = max(self.last_time - (self.start_time or 0.0), 1e-9)
+        util = {
+            n: self.busy_area[n] / (self.cluster.capacities[n] * elapsed)
+            for n in self.cluster.names
+        }
+        waits = np.array([j.wait for j in jobs]) if jobs else np.zeros(1)
+        slow = np.array([j.slowdown for j in jobs]) if jobs else np.ones(1)
+        bslow = np.array([j.bounded_slowdown() for j in jobs]) if jobs else np.ones(1)
+        return ScheduleMetrics(
+            utilization=util,
+            avg_wait=float(waits.mean()),
+            avg_slowdown=float(slow.mean()),
+            avg_bounded_slowdown=float(bslow.mean()),
+            p95_wait=float(np.percentile(waits, 95)),
+            max_wait=float(waits.max()),
+            n_jobs=len(jobs),
+            makespan=self.last_time,
+        )

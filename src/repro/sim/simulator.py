@@ -1,0 +1,186 @@
+"""Event-driven multi-resource scheduling simulator (CQSim-equivalent).
+
+Semantics follow the paper (§IV): jobs are imported from a trace; the
+simulation clock advances on job arrival / job completion events; each
+event triggers a scheduling pass in which the policy (MRSch agent or a
+baseline) repeatedly selects jobs from a window at the head of the queue.
+A selected job that fits starts immediately; the first selected job that
+does not fit receives a reservation at its earliest fit time and EASY
+backfilling then fills the remaining gap (§III-C).
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Protocol, Sequence
+
+import numpy as np
+
+from .cluster import Cluster, ResourceSpec
+from .job import Job
+from .metrics import MetricsAccumulator, ScheduleMetrics
+
+
+@dataclass
+class SchedContext:
+    """Everything a policy may observe at one selection step."""
+    now: float
+    cluster: Cluster
+    window: List[Job]            # first W waiting jobs, arrival order
+    queue_len: int
+    running: List[Job]
+    queue: Optional[List[Job]] = None   # full waiting queue (arrival order)
+
+
+class SchedulingPolicy(Protocol):
+    def select(self, ctx: SchedContext) -> int:
+        """Return an index into ``ctx.window``."""
+        ...
+
+    def notify_started(self, job: Job, ctx: SchedContext) -> None: ...
+    def notify_reserved(self, job: Job, ctx: SchedContext) -> None: ...
+
+
+@dataclass
+class SimConfig:
+    window: int = 10             # W, paper §III-C / §IV-C
+    backfill: bool = True        # EASY backfilling
+    max_events: int = 50_000_000
+
+
+@dataclass
+class SimResult:
+    metrics: ScheduleMetrics
+    jobs: List[Job]
+    makespan: float
+    decisions: int
+
+
+class Simulator:
+    def __init__(self, resources: Sequence[ResourceSpec], jobs: Sequence[Job],
+                 policy, config: SimConfig | None = None):
+        self.cluster = Cluster(list(resources))
+        self.jobs = sorted((j.copy() for j in jobs), key=lambda j: (j.submit, j.jid))
+        self.policy = policy
+        self.config = config or SimConfig()
+        self.queue: List[Job] = []
+        self._events: List = []
+        self._eseq = itertools.count()
+        self.now = 0.0
+        self.decisions = 0
+        self.acc = MetricsAccumulator(self.cluster)
+
+    # ------------------------------------------------------------ event api
+    def _push(self, time: float, kind: str, payload) -> None:
+        heapq.heappush(self._events, (time, next(self._eseq), kind, payload))
+
+    # ------------------------------------------------------------ main loop
+    def run(self) -> SimResult:
+        for job in self.jobs:
+            self._push(job.submit, "submit", job)
+        n_events = 0
+        while self._events:
+            n_events += 1
+            if n_events > self.config.max_events:
+                raise RuntimeError("simulator exceeded max_events")
+            time, _, kind, payload = heapq.heappop(self._events)
+            self.acc.advance(time)
+            self.now = time
+            if kind == "submit":
+                self.queue.append(payload)
+            elif kind == "end":
+                self.cluster.release_job(payload)
+            # Coalesce events at identical timestamps before scheduling.
+            while self._events and self._events[0][0] == time:
+                t2, _, k2, p2 = heapq.heappop(self._events)
+                if k2 == "submit":
+                    self.queue.append(p2)
+                else:
+                    self.cluster.release_job(p2)
+            self._schedule()
+        finished = [j for j in self.jobs if j.started]
+        return SimResult(
+            metrics=self.acc.summarize(finished),
+            jobs=finished,
+            makespan=self.now,
+            decisions=self.decisions,
+        )
+
+    # ------------------------------------------------------------ scheduling
+    def _ctx(self) -> SchedContext:
+        return SchedContext(
+            now=self.now,
+            cluster=self.cluster,
+            window=self.queue[: self.config.window],
+            queue_len=len(self.queue),
+            running=[rj.job for rj in self.cluster.running_jobs()],
+            queue=self.queue,
+        )
+
+    def _start(self, job: Job) -> None:
+        self.cluster.allocate(job, self.now)
+        self.queue.remove(job)
+        self._push(job.end, "end", job.jid)
+        self.acc.job_started(job)
+
+    def _schedule(self) -> None:
+        """One scheduling pass: window selection loop + reservation + EASY."""
+        while self.queue:
+            ctx = self._ctx()
+            if not ctx.window:
+                break
+            self.decisions += 1
+            a = int(self.policy.select(ctx))
+            a = max(0, min(a, len(ctx.window) - 1))
+            job = ctx.window[a]
+            if self.cluster.fits(job):
+                if hasattr(self.policy, "notify_started"):
+                    self.policy.notify_started(job, ctx)
+                self._start(job)
+                continue
+            # First non-fitting selection: reserve it, then backfill.
+            if hasattr(self.policy, "notify_reserved"):
+                self.policy.notify_reserved(job, ctx)
+            if self.config.backfill:
+                self._easy_backfill(job)
+            break
+
+    def _easy_backfill(self, reserved: Job) -> None:
+        """EASY backfilling against a reservation for ``reserved``.
+
+        A waiting job may jump ahead iff it fits now AND either (a) it is
+        estimated to finish before the reservation start, or (b) at the
+        reservation start the reserved job still fits with the backfilled
+        job occupying its units ("shadow" resources).
+        """
+        t_res = self.cluster.earliest_fit_time(reserved, self.now)
+        if not np.isfinite(t_res):
+            return
+        names = self.cluster.names
+        # Free units at t_res assuming estimated releases and no backfill.
+        free_at_res = {}
+        for n in names:
+            rel = self.cluster.release[n]
+            free_at_res[n] = int((rel <= t_res).sum())  # free now or released by t_res
+        shadow = {n: free_at_res[n] - reserved.demands.get(n, 0) for n in names}
+
+        for job in list(self.queue):
+            if job is reserved:
+                continue
+            if not self.cluster.fits(job):
+                continue
+            ends_before = self.now + job.walltime <= t_res
+            fits_shadow = all(job.demands.get(n, 0) <= shadow[n] for n in names)
+            if ends_before or fits_shadow:
+                if not ends_before:
+                    for n in names:
+                        shadow[n] -= job.demands.get(n, 0)
+                self._start(job)
+
+
+def run_trace(resources, jobs, policy, window: int = 10,
+              backfill: bool = True) -> SimResult:
+    """Convenience one-shot simulation."""
+    return Simulator(resources, jobs, policy,
+                     SimConfig(window=window, backfill=backfill)).run()

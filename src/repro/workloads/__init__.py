@@ -1,0 +1,10 @@
+from .jobsets import Curriculum, build_curriculum, real_jobsets, sampled_jobsets, synthetic_jobsets
+from .scenarios import SCENARIOS, build_scenarios, derive_scenario, with_power
+from .theta import THETA_BB_UNITS, THETA_NODES, ThetaConfig, generate_trace, jobs_from_swf
+
+__all__ = [
+    "Curriculum", "build_curriculum", "real_jobsets", "sampled_jobsets",
+    "synthetic_jobsets", "SCENARIOS", "build_scenarios", "derive_scenario",
+    "with_power", "THETA_BB_UNITS", "THETA_NODES", "ThetaConfig",
+    "generate_trace", "jobs_from_swf",
+]

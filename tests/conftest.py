@@ -1,0 +1,13 @@
+import os
+
+# Tests run single-device (the dry-run alone forces 512 fake devices, in
+# its own process); keep determinism and silence accelerator probing.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

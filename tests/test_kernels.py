@@ -1,0 +1,147 @@
+"""Per-kernel allclose sweeps against the pure-jnp oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.fused_mlp.ops import fused_mlp
+from repro.kernels.fused_mlp.ref import fused_mlp_layer_ref
+from repro.kernels.ssd.ops import ssd
+from repro.kernels.ssd.ref import ssd_ref
+
+
+def tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------- fused_mlp
+@pytest.mark.parametrize("m,k,n", [(1, 64, 32), (37, 300, 129),
+                                   (128, 512, 256), (200, 1000, 513)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("act", ["leaky_relu", "relu", "tanh"])
+def test_fused_mlp_matches_ref(m, k, n, dtype, act):
+    key = jax.random.PRNGKey(m * 7 + n)
+    x = jax.random.normal(key, (m, k), dtype)
+    w = (jax.random.normal(jax.random.fold_in(key, 1), (k, n), jnp.float32)
+         * 0.05).astype(dtype)
+    b = jax.random.normal(jax.random.fold_in(key, 2), (n,), dtype)
+    out = fused_mlp(x, w, b, activation=act)
+    ref = fused_mlp_layer_ref(x, w, b, activation=act)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **tol(dtype))
+
+
+def test_fused_mlp_dfp_sizes():
+    """The paper's exact state-module sizes (11410 -> 4000) in bf16."""
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (4, 11410), jnp.bfloat16)
+    w = (jax.random.normal(key, (11410, 4000), jnp.float32) * 0.01
+         ).astype(jnp.bfloat16)
+    b = jnp.zeros((4000,), jnp.bfloat16)
+    out = fused_mlp(x, w, b)
+    ref = fused_mlp_layer_ref(x, w, b)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), rtol=5e-2,
+                               atol=5e-2)
+
+
+# ------------------------------------------------------------- flash attn
+@pytest.mark.parametrize("B,S,H,KV,dh", [
+    (1, 128, 2, 2, 64), (2, 200, 4, 2, 64), (1, 384, 8, 1, 128),
+    (2, 256, 6, 6, 32),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_matches_ref(B, S, H, KV, dh, dtype, causal):
+    key = jax.random.PRNGKey(S + H)
+    q = jax.random.normal(key, (B, S, H, dh), dtype)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, KV, dh), dtype)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, KV, dh), dtype)
+    out = flash_attention(q, k, v, causal=causal)
+    kr = jnp.repeat(k, H // KV, 2)
+    vr = jnp.repeat(v, H // KV, 2)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, dh)
+    kf = kr.transpose(0, 2, 1, 3).reshape(B * H, S, dh)
+    vf = vr.transpose(0, 2, 1, 3).reshape(B * H, S, dh)
+    ref = attention_ref(qf, kf, vf, causal=causal).reshape(B, H, S, dh)
+    ref = ref.transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **tol(dtype))
+
+
+def test_flash_attention_cross_lengths():
+    """Sq != Sk (non-causal cross attention path)."""
+    key = jax.random.PRNGKey(3)
+    q = jax.random.normal(key, (2, 100, 4, 64))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (2, 260, 4, 64))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (2, 260, 4, 64))
+    out = flash_attention(q, k, v, causal=False)
+    qf = q.transpose(0, 2, 1, 3).reshape(8, 100, 64)
+    kf = k.transpose(0, 2, 1, 3).reshape(8, 260, 64)
+    vf = v.transpose(0, 2, 1, 3).reshape(8, 260, 64)
+    ref = attention_ref(qf, kf, vf, causal=False).reshape(2, 4, 100, 64)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(ref.transpose(0, 2, 1, 3)),
+                               rtol=2e-4, atol=2e-4)
+
+
+# -------------------------------------------------------------------- ssd
+@pytest.mark.parametrize("B,S,H,P,N,chunk", [
+    (1, 64, 2, 16, 8, 16), (2, 100, 3, 16, 8, 32), (1, 256, 4, 32, 16, 64),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_matches_sequential_ref(B, S, H, P, N, chunk, dtype):
+    key = jax.random.PRNGKey(S)
+    x = jax.random.normal(key, (B, S, H, P), dtype)
+    dt = jax.nn.softplus(
+        jax.random.normal(jax.random.fold_in(key, 1), (B, S, H)))
+    dA = -dt * jnp.exp(jax.random.normal(jax.random.fold_in(key, 2), (H,)) * 0.3)
+    Bm = (jax.random.normal(jax.random.fold_in(key, 3), (B, S, H, N)) * 0.3
+          ).astype(dtype)
+    Cm = (jax.random.normal(jax.random.fold_in(key, 4), (B, S, H, N)) * 0.3
+          ).astype(dtype)
+    y = ssd(x, dt, dA, Bm, Cm, chunk=chunk)
+
+    def flat(t, d):
+        return t.transpose(0, 2, 1, 3).reshape(B * H, S, d)
+
+    yr = ssd_ref(flat(x, P), dt.transpose(0, 2, 1).reshape(B * H, S, 1),
+                 dA.transpose(0, 2, 1).reshape(B * H, S, 1),
+                 flat(Bm, N), flat(Cm, N))
+    yr = yr.reshape(B, H, S, P).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32),
+                               **(dict(rtol=5e-2, atol=5e-2)
+                                  if dtype == jnp.bfloat16 else
+                                  dict(rtol=1e-3, atol=1e-3)))
+
+
+def test_model_chunked_ssd_matches_sequential_ref():
+    """The vectorized chunked SSD inside the model (associative scan) must
+    also match the exact recurrence."""
+    from repro.models.mamba2 import _ssd_chunked
+    key = jax.random.PRNGKey(9)
+    B, S, H, P, N, chunk = 2, 128, 4, 16, 8, 32
+    x = jax.random.normal(key, (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(key, 1),
+                                           (B, S, H)))
+    dA = -dt * 0.4
+    Bm = jax.random.normal(jax.random.fold_in(key, 2), (B, S, 1, N)) * 0.3
+    Cm = jax.random.normal(jax.random.fold_in(key, 3), (B, S, 1, N)) * 0.3
+    y = _ssd_chunked(x, dt, dA, Bm, Cm, chunk)
+
+    def flat(t, d):
+        return jnp.repeat(t, H, axis=2).transpose(0, 2, 1, 3).reshape(
+            B * H, S, d) if t.shape[2] == 1 else \
+            t.transpose(0, 2, 1, 3).reshape(B * H, S, d)
+
+    yr = ssd_ref(x.transpose(0, 2, 1, 3).reshape(B * H, S, P),
+                 dt.transpose(0, 2, 1).reshape(B * H, S, 1),
+                 dA.transpose(0, 2, 1).reshape(B * H, S, 1),
+                 flat(Bm, N), flat(Cm, N))
+    yr = yr.reshape(B, H, S, P).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=1e-3,
+                               atol=1e-3)

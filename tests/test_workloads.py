@@ -1,0 +1,71 @@
+"""Workload generator statistics vs the published trace properties."""
+import numpy as np
+import pytest
+
+from repro.workloads import (SCENARIOS, ThetaConfig, build_curriculum,
+                             build_scenarios, derive_scenario, generate_trace,
+                             with_power)
+
+
+def test_theta_full_dims_match_paper():
+    cfg = ThetaConfig()
+    assert cfg.n_nodes == 4392
+    assert cfg.bb_units == 1293
+    # 4W + 2*N1 + 2*N2 = 11410 with W=10 (checked in test_dfp too)
+    assert 4 * 10 + 2 * cfg.n_nodes + 2 * cfg.bb_units == 11410
+
+
+def test_base_trace_io_statistics():
+    """~40% of jobs with I/O records; ~17.18% moving >1GB (paper §IV-A)."""
+    cfg = ThetaConfig.mini(seed=3, duration_days=40, jobs_per_day=200)
+    jobs = generate_trace(cfg)
+    assert len(jobs) > 3000
+    frac_bb = np.mean([j.demands["bb"] > 0 for j in jobs])
+    # >1GB movers get >=1 BB unit; small movers round to >=1 unit too at
+    # mini scale, so check the big-mover fraction via raw generation stats.
+    assert 0.05 < frac_bb < 0.45
+
+
+def test_jobs_fit_capacity():
+    cfg = ThetaConfig.mini(seed=0)
+    for j in generate_trace(cfg):
+        assert 0 < j.demands["node"] <= cfg.n_nodes
+        assert 0 <= j.demands["bb"] <= cfg.bb_units
+        assert j.walltime >= j.runtime > 0
+
+
+@pytest.mark.parametrize("name", list(SCENARIOS))
+def test_scenarios_match_table_iii(name):
+    cfg = ThetaConfig.mini(seed=1, duration_days=10)
+    base = generate_trace(cfg)
+    jobs = derive_scenario(base, cfg, name, seed=5)
+    frac, lo_tb, halve = SCENARIOS[name]
+    got_frac = np.mean([j.demands["bb"] > 0 for j in jobs])
+    assert got_frac == pytest.approx(frac, abs=0.08)
+    if halve:
+        pairs = [(b.demands["node"], j.demands["node"])
+                 for b, j in zip(base, jobs)]
+        assert all(jn <= max(bn // 2, 1) for bn, jn in pairs)
+
+
+def test_power_profiles():
+    cfg = ThetaConfig.mini(seed=2, duration_days=5)
+    jobs = with_power(generate_trace(cfg), cfg)
+    for j in jobs:
+        watts = j.demands["power"] * 1000.0
+        assert watts >= j.demands["node"] * 100.0 - 1000
+        assert watts <= j.demands["node"] * 215.0 + 1000
+
+
+def test_curriculum_structure():
+    cfg = ThetaConfig.mini(seed=0, duration_days=6)
+    trace = generate_trace(cfg)
+    cur = build_curriculum(cfg, trace, n_sampled=2, n_real=2, n_synth=3,
+                           jobs_per_set=100)
+    assert len(cur.sampled) == 2 and len(cur.real) == 2 \
+        and len(cur.synthetic) == 3
+    ordered = cur.ordered("sampled_real_synthetic")
+    assert len(ordered) == 7
+    for js in ordered:
+        assert all(js[i].submit <= js[i + 1].submit
+                   for i in range(len(js) - 1))
