@@ -4,20 +4,84 @@ Trains MRSch (curriculum) and ScalarRL on sampled/real/synthetic jobsets,
 then evaluates FCFS / GA / ScalarRL / MRSch on each scenario's held-out
 trace.  Emits per-scenario metric rows (Figs. 5-6) and normalized overall
 scores (Fig. 7 Kiviat areas).
+
+Standalone entry point (also the CI benchmark smoke)::
+
+    python -m benchmarks.bench_scheduling --smoke --vector 4
+
+times the scenario sweep sequentially AND through the batched
+``VectorSimulator`` rollout engine and records the decision-throughput
+speedup in the result JSON.
 """
 from __future__ import annotations
 
+import argparse
 import time
 
-from repro.core import FCFSPolicy, GAConfig, GAOptimizer, evaluate
-from repro.workloads import build_curriculum, build_scenarios, generate_trace
+from repro.core import (AgentConfig, FCFSPolicy, GAConfig, GAOptimizer,
+                        MRSchAgent, evaluate)
+from repro.workloads import build_curriculum, build_scenarios, build_sweep, run_sweep
 
 from .common import (Timer, kiviat_scores, metric_row, mini_setup, save_json,
                      train_mrsch, train_scalar_rl)
 
 
+def sweep_throughput(agent, res, cfg, scenarios, seeds, vector: int,
+                     trials: int = 3):
+    """Decision throughput of the same sweep, sequential vs vector=N.
+
+    Per-env results must be identical between the two modes (the lockstep
+    engine only changes when inference happens); divergence raises — and
+    thereby fails the CI smoke — so a speedup can never come from silently
+    diverging rollouts.  Throughput is the median of ``trials`` runs per
+    mode to damp scheduler/CPU noise.
+    """
+    tasks = build_sweep(cfg, scenarios=scenarios, seeds=seeds)
+    warm = [(t, jobs[:40]) for t, jobs in tasks]
+    run_sweep(res, warm, agent, vector=0)            # jit warm-up, both paths
+    run_sweep(res, warm, agent, vector=vector)
+    seq_runs = [run_sweep(res, tasks, agent, vector=0) for _ in range(trials)]
+    vec_runs = [run_sweep(res, tasks, agent, vector=vector)
+                for _ in range(trials)]
+    seq = sorted(seq_runs, key=lambda r: r["decisions_per_sec"])[trials // 2]
+    vec = sorted(vec_runs, key=lambda r: r["decisions_per_sec"])[trials // 2]
+    equivalent = seq["tasks"] == vec["tasks"]
+    if not equivalent:
+        diverged = [a["scenario"] for a, b in zip(seq["tasks"], vec["tasks"])
+                    if a != b]
+        raise RuntimeError(
+            f"vectorized rollouts diverged from sequential on {diverged}; "
+            "a throughput comparison over different trajectories is invalid")
+    return {
+        "n_envs": vector,
+        "sequential": seq,
+        "vectorized": vec,
+        "decision_throughput_speedup": round(
+            vec["decisions_per_sec"] / max(seq["decisions_per_sec"], 1e-9), 3),
+        "equivalent": equivalent,
+    }
+
+
+def run_smoke(vector: int = 4, trials: int = 3, seed: int = 0):
+    """CI-sized sweep benchmark: mini cluster, short trace, untrained agent.
+
+    Skips policy training — the batching speedup and the sequential/vector
+    equivalence are properties of the rollout engine, not of the weights.
+    """
+    cfg, res = mini_setup(seed=seed, duration_days=0.75, jobs_per_day=160)
+    agent = MRSchAgent(res, AgentConfig(
+        state_hidden=(256, 64), state_out=32, module_hidden=16, seed=seed))
+    out = {
+        "config": "mini(256 nodes, 80 bb units), 0.75 days, untrained agent",
+        **sweep_throughput(agent, res, cfg, scenarios=("S1", "S2", "S3", "S4"),
+                           seeds=(1, 2), vector=vector, trials=trials),
+    }
+    save_json("scheduling_sweep", out)
+    return out
+
+
 def run(quick: bool = True, scenarios=("S1", "S2", "S3", "S4", "S5"),
-        seed: int = 0):
+        seed: int = 0, vector: int = 0):
     cfg, res = mini_setup(seed=seed)
     n_sets, jobs_per_set = (6, 260) if quick else (16, 1200)
 
@@ -58,6 +122,12 @@ def run(quick: bool = True, scenarios=("S1", "S2", "S3", "S4", "S5"),
             "rows": rows,
             "kiviat": kiviat_scores(rows),
         }
+    if vector and vector > 1:
+        # Same trained agent swept through the batched rollout engine:
+        # record the decision-throughput speedup next to the fidelity rows.
+        out["vector_sweep"] = sweep_throughput(
+            agent, res, cfg, scenarios=scenarios, seeds=(seed + 7,),
+            vector=vector)
     save_json("scheduling", out)
     return out
 
@@ -73,8 +143,30 @@ def summarize(out) -> str:
             fcfs["avg_wait"], 1e-9)
         lines.append(f"{name}: best={best} kiviat={k} "
                      f"MRSch wait cut vs FCFS={wait_gain:.1%}")
+    if "vector_sweep" in out:
+        lines.append(summarize_sweep(out["vector_sweep"]))
     return "\n".join(lines)
 
 
+def summarize_sweep(sw) -> str:
+    return (f"sweep[N={sw['n_envs']}]: "
+            f"seq={sw['sequential']['decisions_per_sec']:.0f}/s "
+            f"vec={sw['vectorized']['decisions_per_sec']:.0f}/s "
+            f"speedup={sw['decision_throughput_speedup']:.2f}x "
+            f"equivalent={sw['equivalent']}")
+
+
 if __name__ == "__main__":
-    print(summarize(run()))
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--vector", type=int, default=0,
+                    help="also time the sweep with N lockstep environments")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: tiny sweep benchmark only, no training")
+    args = ap.parse_args()
+    if args.vector < 0:
+        ap.error(f"--vector must be >= 0, got {args.vector}")
+    if args.smoke:
+        print(summarize_sweep(run_smoke(vector=args.vector or 4)))
+    else:
+        print(summarize(run(quick=not args.full, vector=args.vector)))

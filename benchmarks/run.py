@@ -27,6 +27,9 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma-separated bench names")
+    ap.add_argument("--vector", type=int, default=0,
+                    help="batched rollout width for the scheduling sweep "
+                         "(0 = sequential only)")
     args = ap.parse_args()
     quick = not args.full
 
@@ -39,7 +42,8 @@ def main() -> None:
         "roofline_g": lambda: bench_roofline.run(quick=quick),
         "state_module_fig3": lambda: bench_state_module.run(quick=quick),
         "curriculum_fig4": lambda: bench_curriculum.run(quick=quick),
-        "scheduling_fig5_6_7": lambda: bench_scheduling.run(quick=quick),
+        "scheduling_fig5_6_7": lambda: bench_scheduling.run(
+            quick=quick, vector=args.vector),
         "goal_adaptation_fig8_9": lambda: bench_goal_adaptation.run(quick=quick),
         "three_resource_fig10": lambda: bench_three_resource.run(quick=quick),
     }
@@ -68,6 +72,10 @@ def main() -> None:
             wins = sum(1 for k in ks.values()
                        if max(k, key=k.get) == "MRSch")
             derived = f"MRSch_best_in={wins}/{len(ks)}"
+            if "vector_sweep" in out:
+                sw = out["vector_sweep"]
+                derived += (f";sweep_speedup_N{sw['n_envs']}="
+                            f"{sw['decision_throughput_speedup']:.2f}x")
         elif name == "state_module_fig3":
             k = out["kiviat"]
             derived = f"MLP={k.get('MLP', 0):.3f};CNN={k.get('CNN', 0):.3f}"

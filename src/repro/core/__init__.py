@@ -1,6 +1,7 @@
 """The paper's primary contribution: the MRSch DFP scheduling agent."""
 from .agent import AgentConfig, MRSchAgent
-from .dfp import DFPConfig, action_values, greedy_action, init_params, loss_fn, predict
+from .dfp import (DFPConfig, action_values, greedy_action,
+                  greedy_actions_packed, init_params, loss_fn, predict)
 from .encoding import EncodingConfig, encode_measurement, encode_state, encoding_for
 from .goal import goal_vector
 from .policies import FCFSPolicy, GAConfig, GAOptimizer, ScalarRLConfig, ScalarRLPolicy
@@ -9,7 +10,7 @@ from .train import TrainLog, evaluate, train_agent
 
 __all__ = [
     "AgentConfig", "MRSchAgent", "DFPConfig", "action_values", "greedy_action",
-    "init_params", "loss_fn", "predict", "EncodingConfig", "encode_measurement",
+    "greedy_actions_packed", "init_params", "loss_fn", "predict", "EncodingConfig", "encode_measurement",
     "encode_state", "encoding_for", "goal_vector", "FCFSPolicy", "GAConfig",
     "GAOptimizer", "ScalarRLConfig", "ScalarRLPolicy", "Episode",
     "EpisodeRecorder", "ReplayBuffer", "TrainLog", "evaluate", "train_agent",

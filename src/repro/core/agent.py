@@ -19,7 +19,8 @@ import numpy as np
 from ..nn.optim import AdamState, adam_init, adam_update
 from ..sim.cluster import ResourceSpec
 from ..sim.simulator import SchedContext
-from .dfp import DFPConfig, action_values, init_params, loss_fn
+from .dfp import (DFPConfig, action_values, greedy_actions_packed,
+                  init_params, loss_fn)
 from .encoding import EncodingConfig, encode_measurement, encode_state
 from .goal import goal_vector
 from .replay import EpisodeRecorder, ReplayBuffer
@@ -111,6 +112,43 @@ class MRSchAgent:
         if self.training:
             self.recorder.record(state, meas, goal, action)
         return action
+
+    def select_batch(self, ctxs: Sequence[SchedContext]) -> np.ndarray:
+        """Greedy actions for N pending decisions in ONE jitted forward.
+
+        Used by ``repro.sim.vector.VectorSimulator`` to amortize the
+        per-call dispatch overhead across environments.  Evaluation only:
+        the episode recorder and the epsilon schedule are per-trajectory
+        state, so interleaving N environments through them would corrupt
+        the DFP future-measurement targets.
+        """
+        if self.training:
+            raise RuntimeError(
+                "select_batch is evaluation-only: training interleaves N "
+                "environments through one episode recorder, corrupting the "
+                "future-measurement targets; train with Simulator.run per "
+                "trace instead")
+        n = len(ctxs)
+        sd, m, a = self.enc.state_dim, self.enc.n_resources, self.config.window
+        # One packed row per decision ([state | meas | goal | valid]) so a
+        # round costs a single host->device transfer.  Width is padded up to
+        # a power of two so the jit cache sees a small, fixed set of shapes
+        # as environments finish at different times; padded rows are valid
+        # everywhere and their actions are discarded.
+        width = 1 << max(n - 1, 0).bit_length()
+        packed = np.zeros((width, sd + 2 * m + a), dtype=np.float32)
+        packed[n:, sd + 2 * m:] = 1.0
+        for i, c in enumerate(ctxs):
+            packed[i, :sd] = encode_state(self.enc, c)
+            packed[i, sd:sd + m] = encode_measurement(self.enc, c)
+            goal = goal_vector(c, self.enc.resource_names,
+                               self.enc.capacities)
+            packed[i, sd + m:sd + 2 * m] = goal
+            self.goal_log.append(goal)
+            packed[i, sd + 2 * m:sd + 2 * m + min(len(c.window), a)] = 1.0
+        acts = greedy_actions_packed(self.params, self.dfp,
+                                     jnp.asarray(packed))
+        return np.asarray(acts)[:n].astype(np.int32)
 
     # ---------------------------------------------------------------- train
     def end_episode(self) -> Optional[float]:

@@ -152,3 +152,29 @@ def greedy_action(params, cfg: DFPConfig, state, meas, goal,
     u = action_values(params, cfg, state[None], meas[None], goal[None])[0]
     u = jnp.where(valid_mask, u, -jnp.inf)
     return jnp.argmax(u)
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def greedy_actions_packed(params, cfg: DFPConfig, packed) -> jnp.ndarray:
+    """Batched greedy selection: ONE forward pass for N pending decisions.
+
+    ``packed`` is one (N, state_dim + 2M + A) buffer with a row per
+    decision, [state | meas | goal | valid] — a lockstep round pays
+    per-call host->device transfer overhead on every input array, so the
+    rollout engine ships a single buffer and we slice it on device.
+
+    ``vmap`` over the single-decision scorer, so each row's own goal
+    vector weights its own prediction — environments with heterogeneous
+    goals (different contention regimes, Eq. 1) batch together correctly.
+    """
+    sd, m, a = cfg.state_dim, cfg.n_measurements, cfg.n_actions
+    states = packed[:, :sd]
+    meas = packed[:, sd:sd + m]
+    goals = packed[:, sd + m:sd + 2 * m]
+    masks = packed[:, sd + 2 * m:sd + 2 * m + a] > 0.5
+
+    def one(state, mrow, goal, mask):
+        u = action_values(params, cfg, state[None], mrow[None], goal[None])[0]
+        return jnp.argmax(jnp.where(mask, u, -jnp.inf))
+
+    return jax.vmap(one)(states, meas, goals, masks)

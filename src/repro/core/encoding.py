@@ -57,14 +57,18 @@ def encode_state(cfg: EncodingConfig, ctx: SchedContext) -> np.ndarray:
             out[base + r] = job.demands.get(name, 0) / cap
         out[base + cfg.n_resources] = job.walltime / cfg.time_scale
         out[base + cfg.n_resources + 1] = (ctx.now - job.submit) / cfg.time_scale
-    # --- resource units
+    # --- resource units, written straight into the output buffer (this is
+    # the decision hot path: one encode per policy decision)
     offset = cfg.window * cfg.job_dim
-    enc = ctx.cluster.unit_encoding(ctx.now)
-    for r, name in enumerate(cfg.resource_names):
-        pairs = enc[name]            # (capacity, 2): [avail, time-to-free]
-        k = pairs.shape[0]
-        out[offset: offset + k] = pairs[:, 0]
-        out[offset + k: offset + 2 * k] = pairs[:, 1] / cfg.time_scale
+    for name in cfg.resource_names:
+        rel = ctx.cluster.release[name]   # estimated release time, 0 == free
+        k = rel.shape[0]
+        busy = rel > 0.0
+        out[offset: offset + k] = ~busy                          # avail bit
+        ttf = out[offset + k: offset + 2 * k]
+        np.subtract(rel, ctx.now, out=ttf, where=busy)           # time-to-free
+        np.maximum(ttf, 0.0, out=ttf)
+        ttf /= cfg.time_scale
         offset += 2 * k
     return out
 

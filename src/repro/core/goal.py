@@ -23,16 +23,23 @@ def goal_vector(ctx: SchedContext, resource_names: Sequence[str],
     demand_time = np.zeros(R, dtype=np.float64)
 
     # Queued jobs (full queue, not just the window): user walltime estimate.
+    # Built as one (J, R) matvec — this runs on every scheduling decision,
+    # so per-job array construction would dominate the decision hot path.
     queued = ctx.queue if ctx.queue is not None else ctx.window
-    for job in queued:
-        p = np.array([job.demands.get(n, 0) for n in resource_names]) / caps
-        demand_time += p * job.walltime
+    if queued:
+        dem = np.array([[j.demands.get(n, 0) for n in resource_names]
+                        for j in queued], dtype=np.float64)
+        wall = np.array([j.walltime for j in queued], dtype=np.float64)
+        demand_time += wall @ dem / caps
 
     # Running jobs: remaining estimated time.
-    for rj in ctx.cluster.running_jobs():
-        rem = max(rj.est_end - ctx.now, 0.0)
-        p = np.array([rj.job.demands.get(n, 0) for n in resource_names]) / caps
-        demand_time += p * rem
+    running = ctx.cluster.running_jobs()
+    if running:
+        dem = np.array([[rj.job.demands.get(n, 0) for n in resource_names]
+                        for rj in running], dtype=np.float64)
+        rem = np.array([max(rj.est_end - ctx.now, 0.0) for rj in running],
+                       dtype=np.float64)
+        demand_time += rem @ dem / caps
 
     total = demand_time.sum()
     if total <= 0:

@@ -20,6 +20,8 @@ from typing import Dict, Optional, Sequence, Tuple, Union
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from .compat import shard_map
+
 MeshAxes = Union[None, str, Tuple[str, ...]]
 
 
@@ -152,7 +154,7 @@ def tp_row_matmul(h, w, out_shard_axes=("batch", "act_seq", None)):
         return jax.lax.psum_scatter(partial, "model", scatter_dimension=1,
                                     tiled=True)       # (B_loc, S/16, D)
 
-    return jax.shard_map(
+    return shard_map(
         body, mesh=mesh,
         in_specs=(P(batch_axes or None, None, "model"), P("model", None)),
         out_specs=P(batch_axes or None, "model", None),

@@ -15,6 +15,7 @@ from dataclasses import replace
 import jax
 
 from ..configs import SHAPE_ORDER, SHAPES, all_configs, cell_supported, get_config
+from ..distributed.compat import cost_analysis
 from ..distributed.costs import cell_costs, flash_correction
 from ..distributed.hlo_analysis import V5E, collective_stats, roofline_terms
 from ..distributed.sharding import RULE_SETS, default_rules
@@ -73,7 +74,7 @@ def run_cell(arch: str, sname: str, multi_pod: bool, extrapolate: bool = True,
                    traceback=traceback.format_exc()[-2000:])
         return rec
     ma = compiled.memory_analysis()
-    ca = compiled.cost_analysis() or {}
+    ca = cost_analysis(compiled)
     rec.update(
         status="ok", **times,
         mem=dict(
@@ -96,7 +97,7 @@ def run_cell(arch: str, sname: str, multi_pod: bool, extrapolate: bool = True,
                 cfg_n = _truncated(cfg, n)
                 comp_n, _ = _lower_compile(cfg_n, shape, rules, unroll=True,
                                            microbatches=microbatches)
-                ca_n = comp_n.cost_analysis() or {}
+                ca_n = cost_analysis(comp_n)
                 st = collective_stats(comp_n.as_text())
                 f.append(float(ca_n.get("flops", 0.0)))
                 b.append(float(ca_n.get("bytes accessed", 0.0)))

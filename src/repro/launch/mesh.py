@@ -10,20 +10,19 @@ from __future__ import annotations
 
 import jax
 
+from ..distributed.compat import make_mesh
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips/pod ("data","model"); 2 pods -> (2,16,16) with a
     leading "pod" axis for cross-pod data parallelism."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(model_parallel: int = 1):
     """Mesh over whatever devices exist (tests / CPU examples)."""
     n = len(jax.devices())
     dp = max(n // model_parallel, 1)
-    return jax.make_mesh(
-        (dp, model_parallel), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((dp, model_parallel), ("data", "model"))

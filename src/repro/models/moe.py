@@ -28,6 +28,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from ..distributed.compat import shard_map
+
 from ..configs.base import MoEConfig
 from ..distributed.sharding import current_rules, shard
 from .layers import _act, _init_dense, ffn_apply, ffn_init
@@ -190,7 +192,7 @@ def _moe_small_t(params, x, cfg: MoEConfig, act: str, glu: bool, rules):
     d_spec = "data" if has_data else None
     wspec = P(e_axes if len(e_axes) > 1 else e_axes[0], d_spec, None)
     wdspec = P(e_axes if len(e_axes) > 1 else e_axes[0], None, d_spec)
-    return jax.shard_map(
+    return shard_map(
         body, mesh=mesh,
         in_specs=(P(None, None, None), P(None, None), wspec, wspec, wdspec),
         out_specs=P(None, None, None),
@@ -240,7 +242,7 @@ def moe_apply(params, x: jnp.ndarray, cfg: MoEConfig, act: str, glu: bool,
 
             wspec = P("model", d_shard, None)
             wdspec = P("model", None, d_shard)
-            y = jax.shard_map(
+            y = shard_map(
                 body, mesh=mesh,
                 in_specs=(P(batch_axes, None, None), P(None, None),
                           wspec, wspec, wdspec),

@@ -2,8 +2,11 @@ from .cluster import Cluster, ResourceSpec
 from .job import Job
 from .metrics import MetricsAccumulator, ScheduleMetrics
 from .simulator import SchedContext, SimConfig, SimResult, Simulator, run_trace
+from .vector import (BatchSchedulingPolicy, VectorSimulator, VectorStats,
+                     run_traces)
 
 __all__ = [
     "Cluster", "ResourceSpec", "Job", "MetricsAccumulator", "ScheduleMetrics",
     "SchedContext", "SimConfig", "SimResult", "Simulator", "run_trace",
+    "BatchSchedulingPolicy", "VectorSimulator", "VectorStats", "run_traces",
 ]

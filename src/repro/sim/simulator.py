@@ -7,6 +7,13 @@ baseline) repeatedly selects jobs from a window at the head of the queue.
 A selected job that fits starts immediately; the first selected job that
 does not fit receives a reservation at its earliest fit time and EASY
 backfilling then fills the remaining gap (§III-C).
+
+The decision step is *re-entrant*: ``next_decision()`` advances the event
+loop until a policy decision is required and returns the pending
+``SchedContext``; ``post_action(a)`` applies the selection and resumes.
+``run()`` is the synchronous adapter that drives a ``SchedulingPolicy``
+inline, and ``repro.sim.vector.VectorSimulator`` interleaves many
+simulators through the same API so policy inference can be batched.
 """
 from __future__ import annotations
 
@@ -52,9 +59,14 @@ class SimConfig:
 @dataclass
 class SimResult:
     metrics: ScheduleMetrics
-    jobs: List[Job]
+    jobs: List[Job]              # ALL trace jobs, including never-started
     makespan: float
     decisions: int
+    n_unstarted: int = 0         # jobs still waiting when events drained
+
+    @property
+    def started_jobs(self) -> List[Job]:
+        return [j for j in self.jobs if j.started]
 
 
 class Simulator:
@@ -70,42 +82,107 @@ class Simulator:
         self.now = 0.0
         self.decisions = 0
         self.acc = MetricsAccumulator(self.cluster)
+        self._started = False
+        self._in_pass = False     # inside a scheduling pass awaiting decisions
 
     # ------------------------------------------------------------ event api
     def _push(self, time: float, kind: str, payload) -> None:
         heapq.heappush(self._events, (time, next(self._eseq), kind, payload))
 
-    # ------------------------------------------------------------ main loop
-    def run(self) -> SimResult:
+    def _apply(self, kind: str, payload) -> None:
+        if kind == "submit":
+            self.queue.append(payload)
+        else:  # "end"
+            self.cluster.release_job(payload)
+
+    # ------------------------------------------------------------ re-entrant
+    def start(self) -> None:
+        """Seed the event queue.  Idempotent; called lazily by the steppers."""
+        if self._started:
+            return
+        self._started = True
+        self._n_events = 0
         for job in self.jobs:
             self._push(job.submit, "submit", job)
-        n_events = 0
-        while self._events:
-            n_events += 1
-            if n_events > self.config.max_events:
+
+    def next_decision(self) -> Optional[SchedContext]:
+        """Advance the event loop until the policy must pick a window slot.
+
+        Returns the pending ``SchedContext``, or ``None`` once every event
+        has been processed (the simulation is over).  Each returned context
+        must be answered with exactly one ``post_action`` call before the
+        next ``next_decision``.
+        """
+        self.start()
+        while True:
+            if self._in_pass:
+                if self.queue:
+                    return self._ctx()
+                self._in_pass = False
+            if not self._events:
+                return None
+            self._n_events += 1
+            if self._n_events > self.config.max_events:
                 raise RuntimeError("simulator exceeded max_events")
             time, _, kind, payload = heapq.heappop(self._events)
             self.acc.advance(time)
             self.now = time
-            if kind == "submit":
-                self.queue.append(payload)
-            elif kind == "end":
-                self.cluster.release_job(payload)
+            self._apply(kind, payload)
             # Coalesce events at identical timestamps before scheduling.
             while self._events and self._events[0][0] == time:
-                t2, _, k2, p2 = heapq.heappop(self._events)
-                if k2 == "submit":
-                    self.queue.append(p2)
-                else:
-                    self.cluster.release_job(p2)
-            self._schedule()
-        finished = [j for j in self.jobs if j.started]
+                _, _, k2, p2 = heapq.heappop(self._events)
+                self._apply(k2, p2)
+            self._in_pass = True
+
+    def post_action(self, action: int) -> None:
+        """Apply the policy's selection for the context from ``next_decision``.
+
+        A fitting job starts and the scheduling pass continues (the next
+        ``next_decision`` returns a fresh context at the same timestamp);
+        the first non-fitting selection takes a reservation, triggers EASY
+        backfilling, and ends the pass.
+        """
+        assert self._in_pass and self.queue, "no pending decision"
+        ctx = self._ctx()
+        self.decisions += 1
+        a = max(0, min(int(action), len(ctx.window) - 1))
+        job = ctx.window[a]
+        if self.cluster.fits(job):
+            if hasattr(self.policy, "notify_started"):
+                self.policy.notify_started(job, ctx)
+            self._start(job)
+            return
+        # First non-fitting selection: reserve it, then backfill.
+        if hasattr(self.policy, "notify_reserved"):
+            self.policy.notify_reserved(job, ctx)
+        if self.config.backfill:
+            self._easy_backfill(job)
+        self._in_pass = False
+
+    def result(self) -> SimResult:
+        """Summarize after the event loop drains.
+
+        ``jobs`` contains the FULL trace, including jobs that never started
+        (e.g. demands exceeding capacity, so no event could free enough
+        units).  Wait/slowdown metrics aggregate started jobs only — an
+        unstarted job has no finite wait — but ``n_unstarted`` is reported
+        so starvation cannot pass silently.
+        """
+        started = [j for j in self.jobs if j.started]
         return SimResult(
-            metrics=self.acc.summarize(finished),
-            jobs=finished,
+            metrics=self.acc.summarize(started),
+            jobs=list(self.jobs),
             makespan=self.now,
             decisions=self.decisions,
+            n_unstarted=len(self.jobs) - len(started),
         )
+
+    # ------------------------------------------------------------ main loop
+    def run(self) -> SimResult:
+        """Synchronous adapter: drive ``self.policy.select`` inline."""
+        while (ctx := self.next_decision()) is not None:
+            self.post_action(int(self.policy.select(ctx)))
+        return self.result()
 
     # ------------------------------------------------------------ scheduling
     def _ctx(self) -> SchedContext:
@@ -123,28 +200,6 @@ class Simulator:
         self.queue.remove(job)
         self._push(job.end, "end", job.jid)
         self.acc.job_started(job)
-
-    def _schedule(self) -> None:
-        """One scheduling pass: window selection loop + reservation + EASY."""
-        while self.queue:
-            ctx = self._ctx()
-            if not ctx.window:
-                break
-            self.decisions += 1
-            a = int(self.policy.select(ctx))
-            a = max(0, min(a, len(ctx.window) - 1))
-            job = ctx.window[a]
-            if self.cluster.fits(job):
-                if hasattr(self.policy, "notify_started"):
-                    self.policy.notify_started(job, ctx)
-                self._start(job)
-                continue
-            # First non-fitting selection: reserve it, then backfill.
-            if hasattr(self.policy, "notify_reserved"):
-                self.policy.notify_reserved(job, ctx)
-            if self.config.backfill:
-                self._easy_backfill(job)
-            break
 
     def _easy_backfill(self, reserved: Job) -> None:
         """EASY backfilling against a reservation for ``reserved``.

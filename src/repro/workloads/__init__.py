@@ -1,10 +1,12 @@
 from .jobsets import Curriculum, build_curriculum, real_jobsets, sampled_jobsets, synthetic_jobsets
 from .scenarios import SCENARIOS, build_scenarios, derive_scenario, with_power
+from .sweep import SweepTask, build_sweep, run_sweep
 from .theta import THETA_BB_UNITS, THETA_NODES, ThetaConfig, generate_trace, jobs_from_swf
 
 __all__ = [
     "Curriculum", "build_curriculum", "real_jobsets", "sampled_jobsets",
     "synthetic_jobsets", "SCENARIOS", "build_scenarios", "derive_scenario",
-    "with_power", "THETA_BB_UNITS", "THETA_NODES", "ThetaConfig",
+    "with_power", "SweepTask", "build_sweep", "run_sweep",
+    "THETA_BB_UNITS", "THETA_NODES", "ThetaConfig",
     "generate_trace", "jobs_from_swf",
 ]

@@ -1,0 +1,88 @@
+"""Scenario-sweep harness: scenarios x seeds, sequential or vectorized.
+
+The paper's results (§V) come from sweeping a policy across workload
+scenarios S1-S10 with multiple trace seeds.  ``build_sweep`` materializes
+the (scenario, seed) task grid; ``run_sweep`` evaluates one policy over it
+either one trace at a time or through the batched
+``repro.sim.VectorSimulator`` rollout engine, and reports decision
+throughput either way so the two modes can be compared apples-to-apples.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Dict, List, Sequence, Tuple
+
+from ..sim.cluster import ResourceSpec
+from ..sim.job import Job
+from ..sim.simulator import SimConfig, SimResult, Simulator
+from ..sim.vector import VectorSimulator
+from .scenarios import build_scenarios
+from .theta import ThetaConfig
+
+
+@dataclass(frozen=True)
+class SweepTask:
+    scenario: str
+    seed: int
+
+
+def build_sweep(cfg: ThetaConfig, scenarios: Sequence[str] = ("S1", "S2",
+                "S3", "S4", "S5"), seeds: Sequence[int] = (1, 2, 3),
+                power: bool = False) -> List[Tuple[SweepTask, List[Job]]]:
+    """The (scenario x seed) task grid, each with its derived trace."""
+    out: List[Tuple[SweepTask, List[Job]]] = []
+    for seed in seeds:
+        sets = build_scenarios(cfg, names=scenarios, power=power, seed=seed)
+        for name in scenarios:
+            out.append((SweepTask(name, seed), sets[name]))
+    return out
+
+
+def _row(task: SweepTask, result: SimResult) -> Dict:
+    return {
+        "scenario": task.scenario,
+        "seed": task.seed,
+        "decisions": result.decisions,
+        "n_unstarted": result.n_unstarted,
+        **{k: round(float(v), 4) for k, v in result.metrics.as_row().items()},
+    }
+
+
+def run_sweep(resources: Sequence[ResourceSpec],
+              tasks: Sequence[Tuple[SweepTask, List[Job]]], policy,
+              window: int = 10, backfill: bool = True,
+              vector: int = 0) -> Dict:
+    """Evaluate ``policy`` over every sweep task.
+
+    vector=0/1 runs traces one at a time (the classic loop); vector=N
+    advances N environments in lockstep with batched policy inference.
+    Tasks beyond N are processed in successive groups of N.
+    """
+    sim_cfg = SimConfig(window=window, backfill=backfill)
+    t0 = time.perf_counter()
+    results: List[SimResult] = []
+    vector_stats: List[Dict] = []
+    if vector and vector > 1:
+        for i in range(0, len(tasks), vector):
+            chunk = tasks[i:i + vector]
+            vec = VectorSimulator.from_jobsets(
+                resources, [jobs for _, jobs in chunk], policy, sim_cfg)
+            results.extend(vec.run())
+            vector_stats.append(vec.stats.as_dict())
+    else:
+        for _, jobs in tasks:
+            results.append(Simulator(resources, jobs, policy, sim_cfg).run())
+    wall = time.perf_counter() - t0
+    decisions = sum(r.decisions for r in results)
+    out = {
+        "mode": f"vector{vector}" if vector and vector > 1 else "sequential",
+        "n_tasks": len(tasks),
+        "wall_seconds": round(wall, 4),
+        "decisions": decisions,
+        "decisions_per_sec": round(decisions / max(wall, 1e-9), 2),
+        "tasks": [_row(t, r) for (t, _), r in zip(tasks, results)],
+    }
+    if vector_stats:
+        out["vector_stats"] = vector_stats
+    return out

@@ -1,0 +1,35 @@
+"""Import hypothesis, or degrade to skipping the property-based tests.
+
+CI installs hypothesis (pinned in requirements.txt), but the library is
+optional at runtime and some execution environments don't ship it.  A
+missing import must not take down collection of a whole test module — the
+example-based tests in the same file still have to run — so property tests
+import ``given``/``settings``/``st`` from here instead of from hypothesis
+directly.
+"""
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                      # pragma: no cover - CI installs it
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    def given(*args, **kwargs):
+        def deco(fn):
+            return pytest.mark.skip(reason="hypothesis not installed")(fn)
+        return deco
+
+    def settings(*args, **kwargs):
+        return lambda fn: fn
+
+    class _StrategyStub:
+        """Stands in for ``hypothesis.strategies`` at decoration time only;
+        the decorated tests are skipped, so strategies are never drawn."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _StrategyStub()
+
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st"]

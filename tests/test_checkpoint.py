@@ -73,10 +73,10 @@ ELASTIC = textwrap.dedent("""
     import jax, jax.numpy as jnp, numpy as np
     from jax.sharding import NamedSharding, PartitionSpec as P
     from repro.checkpoint import restore_pytree, save_pytree
+    from repro.distributed.compat import make_mesh
 
     mode, path = sys.argv[1], sys.argv[2]
-    mesh = jax.make_mesh((%d,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((%d,), ("data",))
     sh = NamedSharding(mesh, P("data", None))
     t = {"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8)}
     if mode == "save":

@@ -26,11 +26,11 @@ def test_moe_shard_map_matches_local():
     out = run_sub("""
         import jax, jax.numpy as jnp, numpy as np
         from repro.configs import smoke_config
+        from repro.distributed.compat import make_mesh
         from repro.distributed.sharding import Rules, use_rules
         from repro.models.moe import moe_init, moe_apply
         cfg = smoke_config("deepseek-v2-lite-16b").moe
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = make_mesh((2, 4), ("data", "model"))
         params = moe_init(jax.random.PRNGKey(0), 64, cfg, True, jnp.float32)
         x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 64))
         ref = moe_apply(params, x, cfg, "silu", True)
@@ -72,8 +72,8 @@ def test_sharded_train_step_matches_single_device():
         step = make_train_step(cfg, opt)
         p1, o1, m1 = jax.jit(step)(params, opt_state, batch)
         # sharded
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.distributed.compat import make_mesh
+        mesh = make_mesh((2, 4), ("data", "model"))
         rules = default_rules(mesh)
         with use_rules(rules):
             pshard = param_shardings(params, rules)
@@ -96,10 +96,10 @@ def test_sharded_train_step_matches_single_device():
 def test_tp_row_matmul_matches_plain():
     out = run_sub("""
         import jax, jax.numpy as jnp, numpy as np
+        from repro.distributed.compat import make_mesh
         from repro.distributed.sharding import (Rules, tp_row_matmul,
                                                 use_rules)
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = make_mesh((2, 4), ("data", "model"))
         rules = Rules(mapping=dict(batch=("data",), act_seq=("model",),
                                    mlp=("model",), fsdp=("data",)),
                       mesh=mesh)

@@ -1,7 +1,7 @@
 """Simulator invariants: allocation, EASY backfill, metrics."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.sim import Cluster, Job, ResourceSpec, SimConfig, Simulator, run_trace
 from repro.core import FCFSPolicy
@@ -62,6 +62,42 @@ def test_backfill_shadow_resources():
     by = {j.jid: j for j in r.jobs}
     # job 2 finishing long after 100 would steal the head's nodes -> no
     assert by[2].start >= by[1].start
+
+
+def test_backfill_shadow_accounting_multi_resource():
+    """A backfill candidate that fits *now* but would occupy the
+    reservation's shadow units must not start; one that stays inside the
+    shadow may, and it debits the shadow for later candidates."""
+    jobs = mk_jobs([
+        (0.0, 100.0, 100.0, {"node": 3, "bb": 0}),   # A: leaves node=1,bb=4
+        (1.0, 10.0, 10.0, {"node": 2, "bb": 4}),     # B: head, reserved @100
+        (2.0, 500.0, 500.0, {"node": 1, "bb": 1}),   # C: fits now, bb breaks
+                                                     #    B's shadow -> wait
+        (3.0, 500.0, 500.0, {"node": 1, "bb": 0}),   # D: inside shadow -> go
+    ])
+    res = [ResourceSpec("node", 4), ResourceSpec("bb", 4)]
+    r = run_trace(res, jobs, FCFSPolicy())
+    by = {j.jid: j for j in r.jobs}
+    assert by[3].start == pytest.approx(3.0)       # D backfilled immediately
+    assert by[1].start == pytest.approx(100.0)     # reservation honored
+    assert by[2].start >= 100.0                    # C kept out of the shadow
+
+
+def test_backfill_shadow_debits_accumulate():
+    """Two candidates that each fit the shadow alone must not BOTH start
+    when together they exceed it (the running-shadow bookkeeping)."""
+    jobs = mk_jobs([
+        (0.0, 100.0, 100.0, {"node": 2}),            # A: leaves 2 free
+        (1.0, 10.0, 10.0, {"node": 3}),              # B: reserved @100,
+                                                     #    shadow = 4-3 = 1
+        (2.0, 500.0, 500.0, {"node": 1}),            # C: fills the shadow
+        (3.0, 500.0, 500.0, {"node": 1}),            # D: shadow exhausted
+    ])
+    r = run_trace([ResourceSpec("node", 4)], jobs, FCFSPolicy())
+    by = {j.jid: j for j in r.jobs}
+    assert by[2].start == pytest.approx(2.0)
+    assert by[1].start == pytest.approx(100.0)
+    assert by[3].start >= 100.0                    # NOT also backfilled
 
 
 @settings(max_examples=25, deadline=None)

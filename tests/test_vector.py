@@ -1,0 +1,121 @@
+"""Batched rollout engine: re-entrant stepping, lockstep equivalence,
+batched DFP inference, and starvation reporting."""
+import numpy as np
+import pytest
+
+from repro.core import AgentConfig, FCFSPolicy, MRSchAgent
+from repro.sim import (Job, ResourceSpec, SimConfig, Simulator,
+                       VectorSimulator, run_trace, run_traces)
+
+RES = [ResourceSpec("node", 16), ResourceSpec("bb", 8)]
+
+
+def synth_jobs(seed: int, n: int = 40):
+    rng = np.random.default_rng(seed)
+    jobs = []
+    t = 0.0
+    for i in range(n):
+        t += float(rng.exponential(40.0))
+        runtime = float(rng.uniform(20, 300))
+        jobs.append(Job(jid=i, submit=t, runtime=runtime,
+                        walltime=runtime * float(rng.uniform(1.0, 2.0)),
+                        demands={"node": int(rng.integers(1, 12)),
+                                 "bb": int(rng.integers(0, 6))}))
+    return jobs
+
+
+def small_agent(seed: int = 0) -> MRSchAgent:
+    return MRSchAgent(RES, AgentConfig(
+        state_hidden=(32, 16), state_out=8, module_hidden=4, seed=seed))
+
+
+def assert_results_equal(a, b):
+    assert a.metrics.as_row() == b.metrics.as_row()
+    assert a.decisions == b.decisions
+    assert a.n_unstarted == b.n_unstarted
+    assert [(j.jid, j.start, j.end) for j in a.jobs] \
+        == [(j.jid, j.start, j.end) for j in b.jobs]
+
+
+def test_reentrant_stepping_matches_run():
+    """Manually driving next_decision/post_action == the run() adapter."""
+    jobs = synth_jobs(3)
+    ref = run_trace(RES, jobs, FCFSPolicy())
+    sim = Simulator(RES, jobs, FCFSPolicy(), SimConfig(window=10))
+    policy = FCFSPolicy()
+    while (ctx := sim.next_decision()) is not None:
+        sim.post_action(policy.select(ctx))
+    assert_results_equal(sim.result(), ref)
+
+
+@pytest.mark.parametrize("n_envs", [1, 3, 8])
+def test_vector_equals_sequential_fcfs(n_envs):
+    jobsets = [synth_jobs(seed) for seed in range(n_envs)]
+    seq = [run_trace(RES, js, FCFSPolicy()) for js in jobsets]
+    vec = run_traces(RES, jobsets, FCFSPolicy())
+    for a, b in zip(seq, vec):
+        assert_results_equal(a, b)
+
+
+def test_vector_equals_sequential_agent():
+    """Lockstep + batched DFP inference must not change any trajectory,
+    even though the environments develop heterogeneous goal vectors."""
+    agent = small_agent()
+    jobsets = [synth_jobs(seed) for seed in range(4)]
+    # sparse-BB variant to force different contention (and goals) in env 0
+    for j in jobsets[0]:
+        j.demands["bb"] = 0
+    seq = [run_trace(RES, js, agent) for js in jobsets]
+    vec = run_traces(RES, jobsets, agent)
+    for a, b in zip(seq, vec):
+        assert_results_equal(a, b)
+
+
+def test_select_batch_matches_select():
+    """One batched forward == N single forwards, row for row."""
+    agent = small_agent()
+    sims = [Simulator(RES, synth_jobs(seed), agent) for seed in range(3)]
+    ctxs = [s.next_decision() for s in sims]
+    assert all(c is not None for c in ctxs)
+    batch = agent.select_batch(ctxs)
+    singles = [agent.select(c) for c in ctxs]
+    assert list(batch) == singles
+
+
+def test_select_batch_refuses_training_mode():
+    """Interleaving envs through one episode recorder would corrupt the
+    DFP targets, so batched selection is evaluation-only."""
+    agent = small_agent()
+    sim = Simulator(RES, synth_jobs(0), agent)
+    ctx = sim.next_decision()
+    agent.training = True
+    with pytest.raises(RuntimeError, match="evaluation-only"):
+        agent.select_batch([ctx])
+
+
+def test_vector_stats_show_batching():
+    agent = small_agent()
+    jobsets = [synth_jobs(seed) for seed in range(4)]
+    vec = VectorSimulator.from_jobsets(RES, jobsets, agent)
+    results = vec.run()
+    st = vec.stats
+    assert st.decisions == sum(r.decisions for r in results)
+    assert st.policy_calls == st.rounds          # one batched call per round
+    assert st.policy_calls < st.decisions        # i.e. batching happened
+    assert 1 < st.max_batch <= 4
+
+
+def test_unstarted_jobs_reported_not_dropped():
+    """A job that can never fit stays in result.jobs and is counted, and
+    the wait/slowdown aggregates ignore it instead of going negative."""
+    jobs = [
+        Job(0, 0.0, 50.0, 60.0, {"node": 4}),
+        Job(1, 1.0, 10.0, 20.0, {"node": 99}),   # exceeds capacity forever
+    ]
+    r = run_trace([ResourceSpec("node", 8)], jobs, FCFSPolicy())
+    assert len(r.jobs) == 2
+    assert r.n_unstarted == 1
+    assert not [j for j in r.jobs if j.jid == 1][0].started
+    assert [j.jid for j in r.started_jobs] == [0]
+    assert r.metrics.n_jobs == 1
+    assert r.metrics.avg_wait >= 0.0
