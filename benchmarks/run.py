@@ -80,9 +80,14 @@ def main() -> None:
             k = out["kiviat"]
             derived = f"MLP={k.get('MLP', 0):.3f};CNN={k.get('CNN', 0):.3f}"
         elif name == "curriculum_fig4":
-            fl = {k: v["final_loss"] for k, v in out.items()}
+            fl = {k: v["final_loss"] for k, v in out.items()
+                  if k != "vector_training"}
             best = min((v, k) for k, v in fl.items() if v is not None)[1]
             derived = f"best_order={best}"
+            vt = out.get("vector_training")
+            if vt:
+                derived += (f";train_speedup_N{vt['n_envs']}="
+                            f"{vt['speedup']:.2f}x")
         elif name == "goal_adaptation_fig8_9":
             derived = (f"rBB_S1={out['S1']['mean']:.3f};"
                        f"rBB_S5={out['S5']['mean']:.3f}")

@@ -2,15 +2,21 @@
 agent through sampled -> real -> synthetic jobsets (§III-D), checkpoint
 it, and evaluate against all three baselines on held-out S1-S5 traces.
 
-    PYTHONPATH=src python examples/train_scheduler.py [--episodes N]
+By default the curriculum is collected through the batched rollout
+engine: --vector N lanes advance in lockstep, each decision round costs
+one jitted epsilon-greedy DFP forward, and a lane that finishes a jobset
+immediately trains on it and pulls the next one.  --sequential restores
+the paper's one-trace-at-a-time loop (identical trajectories at N=1).
+
+    PYTHONPATH=src python examples/train_scheduler.py [--vector N]
 """
 import argparse
 import os
 import time
 
 from repro.core import (AgentConfig, FCFSPolicy, GAConfig, GAOptimizer,
-                        MRSchAgent, ScalarRLConfig, ScalarRLPolicy, evaluate,
-                        train_agent)
+                        MRSchAgent, ScalarRLConfig, ScalarRLPolicy,
+                        TrainConfig, evaluate, train_agent)
 from repro.sim import run_trace
 from repro.workloads import ThetaConfig, build_curriculum, build_scenarios
 
@@ -19,6 +25,11 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--sets", type=int, default=6)
     ap.add_argument("--jobs-per-set", type=int, default=240)
+    ap.add_argument("--vector", type=int, default=4,
+                    help="lockstep environment lanes for curriculum "
+                         "collection (1 = batched engine, single lane)")
+    ap.add_argument("--sequential", action="store_true",
+                    help="use the classic one-trace-at-a-time loop")
     ap.add_argument("--out", default="results/mrsch_agent.npz")
     args = ap.parse_args()
 
@@ -34,11 +45,16 @@ def main():
     agent = MRSchAgent(res, AgentConfig(
         state_hidden=(1024, 256), state_out=128, module_hidden=64,
         grad_steps_per_episode=24, batch_size=48, eps_decay=0.95))
+    train_config = None if args.sequential else TrainConfig(
+        n_envs=max(1, args.vector), verbose=True)
     t0 = time.time()
     log = train_agent(agent, res, cur.ordered("sampled_real_synthetic"),
-                      verbose=True)
-    print(f"curriculum training: {time.time() - t0:.0f}s, "
-          f"final loss {log.episode_losses[-1] if log.episode_losses else None}")
+                      verbose=True, config=train_config)
+    mode = "sequential" if args.sequential else f"vector{args.vector}"
+    print(f"curriculum training [{mode}]: {time.time() - t0:.0f}s, "
+          f"{log.decisions} decisions ({log.decisions_per_sec:.0f}/s), "
+          f"final loss "
+          f"{log.episode_losses[-1] if log.episode_losses else None}")
     os.makedirs(os.path.dirname(args.out), exist_ok=True)
     agent.save(args.out)
     print("agent checkpoint:", args.out)

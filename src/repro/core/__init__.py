@@ -5,13 +5,16 @@ from .dfp import (DFPConfig, action_values, greedy_action,
 from .encoding import EncodingConfig, encode_measurement, encode_state, encoding_for
 from .goal import goal_vector
 from .policies import FCFSPolicy, GAConfig, GAOptimizer, ScalarRLConfig, ScalarRLPolicy
-from .replay import Episode, EpisodeRecorder, ReplayBuffer
-from .train import TrainLog, evaluate, train_agent
+from .replay import Episode, EpisodeRecorder, ReplayBuffer, VectorEpisodeRecorder
+from .train import (EnvSlot, TrainConfig, TrainLog, evaluate,
+                    slots_from_jobsets, train_agent, train_agent_vectorized)
 
 __all__ = [
     "AgentConfig", "MRSchAgent", "DFPConfig", "action_values", "greedy_action",
     "greedy_actions_packed", "init_params", "loss_fn", "predict", "EncodingConfig", "encode_measurement",
     "encode_state", "encoding_for", "goal_vector", "FCFSPolicy", "GAConfig",
     "GAOptimizer", "ScalarRLConfig", "ScalarRLPolicy", "Episode",
-    "EpisodeRecorder", "ReplayBuffer", "TrainLog", "evaluate", "train_agent",
+    "EpisodeRecorder", "ReplayBuffer", "VectorEpisodeRecorder",
+    "EnvSlot", "TrainConfig", "TrainLog", "evaluate", "slots_from_jobsets",
+    "train_agent", "train_agent_vectorized",
 ]

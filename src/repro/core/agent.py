@@ -23,7 +23,7 @@ from .dfp import (DFPConfig, action_values, greedy_actions_packed,
                   init_params, loss_fn)
 from .encoding import EncodingConfig, encode_measurement, encode_state
 from .goal import goal_vector
-from .replay import EpisodeRecorder, ReplayBuffer
+from .replay import EpisodeRecorder, ReplayBuffer, VectorEpisodeRecorder
 
 
 @dataclass(frozen=True)
@@ -42,16 +42,37 @@ class AgentConfig:
     state_hidden: Tuple[int, ...] = (4000, 1000)
     state_out: int = 512
     module_hidden: int = 128
+    stream_hidden: int = 512
     seed: int = 0
     grad_clip: float = 10.0
 
 
 @functools.partial(jax.jit, static_argnums=(0,), donate_argnums=(1, 2))
 def _train_step(cfg: DFPConfig, params, opt_state, batch, lr, grad_clip):
+    # Single-step variant, kept for per-step latency measurement
+    # (benchmarks/bench_overhead.py); training uses _train_steps_scan.
     loss, grads = jax.value_and_grad(loss_fn)(params, cfg, batch)
     params, opt_state = adam_update(grads, opt_state, params, lr=lr,
                                     grad_clip=grad_clip)
     return params, opt_state, loss
+
+
+@functools.partial(jax.jit, static_argnums=(0,), donate_argnums=(1, 2))
+def _train_steps_scan(cfg: DFPConfig, params, opt_state, batches, lr,
+                      grad_clip):
+    """K gradient steps in ONE dispatch: ``batches`` carries a leading
+    step axis and ``lax.scan`` chains the updates, so an episode's whole
+    training burst pays a single python->XLA round trip instead of K."""
+    def body(carry, batch):
+        params, opt_state = carry
+        loss, grads = jax.value_and_grad(loss_fn)(params, cfg, batch)
+        params, opt_state = adam_update(grads, opt_state, params, lr=lr,
+                                        grad_clip=grad_clip)
+        return (params, opt_state), loss
+
+    (params, opt_state), losses = jax.lax.scan(body, (params, opt_state),
+                                               batches)
+    return params, opt_state, losses
 
 
 @functools.partial(jax.jit, static_argnums=(1,))
@@ -81,12 +102,14 @@ class MRSchAgent:
             state_hidden=config.state_hidden,
             state_out=config.state_out,
             module_hidden=config.module_hidden,
+            stream_hidden=config.stream_hidden,
         )
         key = jax.random.PRNGKey(config.seed)
         self.params = init_params(key, self.dfp)
         self.opt_state = adam_init(self.params)
         self.replay = ReplayBuffer(config.offsets, config.buffer_rows)
         self.recorder = EpisodeRecorder()
+        self.vec_recorder = VectorEpisodeRecorder()
         self.rng = np.random.default_rng(config.seed)
         self.epsilon = config.eps_start
         self.training = False
@@ -94,10 +117,27 @@ class MRSchAgent:
         self.goal_log: List[np.ndarray] = []
 
     # ---------------------------------------------------------------- policy
+    def _ctx_goal(self, ctx: SchedContext) -> np.ndarray:
+        """Eq. (1) goal vector against the context's OWN cluster capacities.
+
+        Identical to using the agent's reference capacities on the
+        homogeneous cluster; on scaled-down training environments (see
+        ``repro.workloads.sweep.build_train_mix``) it keeps the contention
+        normalization honest for that environment.
+        """
+        names = self.enc.resource_names
+        cache = ctx.cluster.__dict__.setdefault("_goal_caps", {})
+        cached = cache.get(names)
+        if cached is None:
+            caps = ctx.cluster.capacities
+            cached = cache[names] = np.maximum(
+                np.asarray([caps[n] for n in names], np.float64), 1.0)
+        return goal_vector(ctx, names, cached)
+
     def select(self, ctx: SchedContext) -> int:
         state = encode_state(self.enc, ctx)
         meas = encode_measurement(self.enc, ctx)
-        goal = goal_vector(ctx, self.enc.resource_names, self.enc.capacities)
+        goal = self._ctx_goal(ctx)
         self.goal_log.append(goal)
         n_valid = min(len(ctx.window), self.config.window)
         if self.training and self.rng.uniform() < self.epsilon:
@@ -113,64 +153,135 @@ class MRSchAgent:
             self.recorder.record(state, meas, goal, action)
         return action
 
-    def select_batch(self, ctxs: Sequence[SchedContext]) -> np.ndarray:
-        """Greedy actions for N pending decisions in ONE jitted forward.
+    def select_batch(self, ctxs: Sequence[SchedContext],
+                     slots: Optional[Sequence[int]] = None) -> np.ndarray:
+        """Actions for N pending decisions with ONE jitted forward.
 
         Used by ``repro.sim.vector.VectorSimulator`` to amortize the
-        per-call dispatch overhead across environments.  Evaluation only:
-        the episode recorder and the epsilon schedule are per-trajectory
-        state, so interleaving N environments through them would corrupt
-        the DFP future-measurement targets.
+        per-call dispatch overhead across environments.  In evaluation
+        mode the actions are greedy and ``slots`` is ignored.  In training
+        mode ``slots`` (one environment id per context) is required: each
+        row gets an independent epsilon-greedy draw and its transition is
+        recorded into that environment's own episode accumulator
+        (``VectorEpisodeRecorder``), keeping every trajectory contiguous
+        for the DFP future-measurement targets.  The host RNG is consumed
+        in row order — one uniform draw per decision, plus one integer
+        draw when exploring — exactly as the sequential ``select`` path,
+        so an N=1 batched rollout reproduces sequential training
+        bit-for-bit given the same seed.
         """
-        if self.training:
+        if self.training and slots is None:
             raise RuntimeError(
-                "select_batch is evaluation-only: training interleaves N "
-                "environments through one episode recorder, corrupting the "
-                "future-measurement targets; train with Simulator.run per "
-                "trace instead")
+                "select_batch without env slots is evaluation-only: "
+                "training interleaves N environments, so each context "
+                "needs a slot id routing its transition to a per-env "
+                "episode accumulator — pass slots=[...] (the vectorized "
+                "trainer in repro.core.train does this), or train with "
+                "Simulator.run per trace")
         n = len(ctxs)
         sd, m, a = self.enc.state_dim, self.enc.n_resources, self.config.window
-        # One packed row per decision ([state | meas | goal | valid]) so a
-        # round costs a single host->device transfer.  Width is padded up to
-        # a power of two so the jit cache sees a small, fixed set of shapes
-        # as environments finish at different times; padded rows are valid
-        # everywhere and their actions are discarded.
-        width = 1 << max(n - 1, 0).bit_length()
-        packed = np.zeros((width, sd + 2 * m + a), dtype=np.float32)
-        packed[n:, sd + 2 * m:] = 1.0
+        # One row per decision ([state | meas | goal | valid]), encoded
+        # straight into a fresh buffer so a round costs one host->device
+        # transfer and zero intermediate copies.
+        feats = np.zeros((n, sd + 2 * m + a), dtype=np.float32)
         for i, c in enumerate(ctxs):
-            packed[i, :sd] = encode_state(self.enc, c)
-            packed[i, sd:sd + m] = encode_measurement(self.enc, c)
-            goal = goal_vector(c, self.enc.resource_names,
-                               self.enc.capacities)
-            packed[i, sd + m:sd + 2 * m] = goal
+            encode_state(self.enc, c, out=feats[i, :sd])
+            feats[i, sd:sd + m] = encode_measurement(self.enc, c)
+            goal = self._ctx_goal(c)
+            feats[i, sd + m:sd + 2 * m] = goal
             self.goal_log.append(goal)
-            packed[i, sd + 2 * m:sd + 2 * m + min(len(c.window), a)] = 1.0
-        acts = greedy_actions_packed(self.params, self.dfp,
-                                     jnp.asarray(packed))
+            feats[i, sd + 2 * m:sd + 2 * m + min(len(c.window), a)] = 1.0
+        if not self.training:
+            return self._greedy_rows(feats)
+        # Epsilon-greedy: draw exploration first (host RNG in row order, the
+        # same stream the sequential path consumes), then run ONE batched
+        # forward over just the exploiting rows — exploring rows never pay
+        # for inference, mirroring the sequential fast path.
+        acts = np.zeros(n, dtype=np.int32)
+        explore = np.empty(n, dtype=bool)
+        for i, c in enumerate(ctxs):
+            explore[i] = self.rng.uniform() < self.epsilon
+            if explore[i]:
+                acts[i] = int(self.rng.integers(
+                    0, min(len(c.window), a)))
+        exploit = np.flatnonzero(~explore)
+        if exploit.size:
+            acts[exploit] = self._greedy_rows(feats[exploit])
+        for i, slot in enumerate(slots):
+            self.vec_recorder.record(
+                int(slot), feats[i, :sd].copy(), feats[i, sd:sd + m].copy(),
+                feats[i, sd + m:sd + 2 * m].copy(), int(acts[i]))
+        return acts
+
+    def _greedy_rows(self, rows: np.ndarray) -> np.ndarray:
+        """One jitted forward over packed decision rows -> greedy actions.
+
+        Width is padded up to a power of two so the jit cache sees a
+        small, fixed set of shapes as environments finish (or explore) at
+        different times; padded rows are valid everywhere and their
+        actions are discarded.  The numpy buffer goes to the jitted
+        function directly — an explicit ``jnp.asarray`` would route the
+        transfer through the slow python ``device_put`` path.
+        """
+        n = rows.shape[0]
+        sd, m = self.enc.state_dim, self.enc.n_resources
+        width = 1 << max(n - 1, 0).bit_length()
+        if width == n:
+            packed = rows
+        else:
+            packed = np.zeros((width, rows.shape[1]), dtype=np.float32)
+            packed[:n] = rows
+            packed[n:, sd + 2 * m:] = 1.0
+        acts = greedy_actions_packed(self.params, self.dfp, packed)
         return np.asarray(acts)[:n].astype(np.int32)
 
     # ---------------------------------------------------------------- train
-    def end_episode(self) -> Optional[float]:
-        """Flush the recorded episode, run gradient steps, decay epsilon."""
-        ep = self.recorder.finish()
+    def begin_vector_episodes(self, n_envs: int) -> None:
+        """Reset the per-environment accumulators for a batched rollout."""
+        self.vec_recorder = VectorEpisodeRecorder(n_envs)
+
+    def end_episode(self, slot: Optional[int] = None) -> Optional[float]:
+        """Flush the recorded episode, run gradient steps, decay epsilon.
+
+        ``slot=None`` closes the sequential recorder (``select`` path);
+        ``slot=i`` closes environment ``i``'s accumulator from a batched
+        rollout.  Either way the finished episode enters the shared replay
+        buffer and, once the buffer holds a minibatch, triggers
+        ``grad_steps_per_episode`` jitted train steps and one epsilon
+        decay — environments finishing mid-batch therefore train the
+        network while the other environments are still collecting.
+        """
+        ep = (self.recorder.finish() if slot is None
+              else self.vec_recorder.finish(slot))
         if ep is not None:
             self.replay.add(ep)
         if not self.training or self.replay.rows < self.config.batch_size:
             return None
-        total = 0.0
-        for _ in range(self.config.grad_steps_per_episode):
-            batch = self.replay.sample(self.rng, self.config.batch_size)
-            batch = {k: jnp.asarray(v) for k, v in batch.items()}
-            self.params, self.opt_state, loss = _train_step(
-                self.dfp, self.params, self.opt_state, batch,
-                self.config.lr, self.config.grad_clip)
-            total += float(loss)
-        mean_loss = total / self.config.grad_steps_per_episode
+        mean_loss = self.train_steps(self.config.grad_steps_per_episode)
+        if mean_loss is None:
+            return None
         self.losses.append(mean_loss)
         self.epsilon = max(self.config.eps_min,
                            self.epsilon * self.config.eps_decay)
         return mean_loss
+
+    def train_steps(self, steps: int) -> Optional[float]:
+        """Run ``steps`` jitted gradient steps on replay samples.
+
+        Returns the mean loss, or None when the buffer cannot yet fill a
+        minibatch.  Used by ``end_episode`` and by the vectorized
+        trainer's per-round interleaved updates
+        (``TrainConfig.grad_steps_per_round``).
+        """
+        if self.replay.rows < self.config.batch_size or steps <= 0:
+            return None
+        samples = [self.replay.sample(self.rng, self.config.batch_size)
+                   for _ in range(steps)]
+        batches = {k: np.stack([s[k] for s in samples]) for k in samples[0]}
+        self.params, self.opt_state, losses = _train_steps_scan(
+            self.dfp, self.params, self.opt_state, batches,
+            self.config.lr, self.config.grad_clip)
+        return float(np.asarray(losses).mean())
 
     # ---------------------------------------------------------------- io
     def save(self, path: str) -> None:

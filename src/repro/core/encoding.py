@@ -15,7 +15,7 @@ which reproduces the paper's 11410 for (W=10, 4392 nodes, 1293 BB units).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Sequence
+from typing import List, Optional, Sequence
 
 import numpy as np
 
@@ -46,30 +46,80 @@ class EncodingConfig:
         return self.window * self.job_dim + 2 * int(sum(self.capacities))
 
 
-def encode_state(cfg: EncodingConfig, ctx: SchedContext) -> np.ndarray:
-    """Build the full state vector for one scheduling instance."""
-    out = np.zeros(cfg.state_dim, dtype=np.float32)
+def _job_static_row(job: Job, key: tuple, caps: Sequence[float],
+                    time_scale: float) -> np.ndarray:
+    """[P_i1 .. P_iR, walltime_norm] for one window job, cached per job.
+
+    Everything but the queued time is fixed for a given (resource order,
+    capacities, time scale) — and this runs for every window slot on every
+    scheduling decision, so the row is stashed on the job instance.
+    """
+    cached = job.__dict__.get("_enc_row")
+    if cached is not None and cached[0] == key:
+        return cached[1]
+    names = key[0]
+    row = np.empty(len(names) + 1, np.float32)
+    for r, name in enumerate(names):
+        row[r] = job.demands.get(name, 0) / caps[r]
+    row[-1] = job.walltime / time_scale
+    job.__dict__["_enc_row"] = (key, row)
+    return row
+
+
+def encode_state(cfg: EncodingConfig, ctx: SchedContext,
+                 out: Optional[np.ndarray] = None) -> np.ndarray:
+    """Build the full state vector for one scheduling instance.
+
+    The layout is fixed by ``cfg.capacities`` so one network can observe
+    heterogeneous training environments: a context whose cluster has fewer
+    units than the reference (a scaled-down lane from
+    ``repro.workloads.sweep.build_train_mix``) fills only the leading unit
+    slots of each resource section; the absent units read as unavailable
+    (availability bit 0, time-to-free 0).  Demand fractions are normalized
+    by the context's own cluster capacity, so "half the machine" means the
+    same thing in every lane.  ``out``, when given, must be a zeroed
+    float32 buffer of ``cfg.state_dim`` (the batched agent writes rows of
+    its packed decision buffer directly).
+    """
+    if out is None:
+        out = np.zeros(cfg.state_dim, dtype=np.float32)
+    # The cache key is identical for every decision on one cluster (caps
+    # are fixed at construction), so stash it there: encoding runs on the
+    # per-decision hot path.
+    cached = ctx.cluster.__dict__.get("_enc_key")
+    if cached is not None and cached[0] is cfg:
+        key, caps_t = cached[1], cached[2]
+        names = key[0]
+    else:
+        caps = ctx.cluster.capacities
+        names = tuple(cfg.resource_names)
+        caps_t = tuple(float(max(int(caps.get(n, c)), 1))
+                       for n, c in zip(names, cfg.capacities))
+        key = (names, caps_t, cfg.time_scale)
+        ctx.cluster.__dict__["_enc_key"] = (cfg, key, caps_t)
+    R = cfg.n_resources
     # --- window jobs
+    now = ctx.now
     for slot, job in enumerate(ctx.window[: cfg.window]):
         base = slot * cfg.job_dim
-        for r, name in enumerate(cfg.resource_names):
-            cap = max(int(cfg.capacities[r]), 1)
-            out[base + r] = job.demands.get(name, 0) / cap
-        out[base + cfg.n_resources] = job.walltime / cfg.time_scale
-        out[base + cfg.n_resources + 1] = (ctx.now - job.submit) / cfg.time_scale
+        out[base: base + R + 1] = _job_static_row(job, key, caps_t,
+                                                  cfg.time_scale)
+        out[base + R + 1] = (now - job.submit) / cfg.time_scale
     # --- resource units, written straight into the output buffer (this is
     # the decision hot path: one encode per policy decision)
     offset = cfg.window * cfg.job_dim
-    for name in cfg.resource_names:
+    for r, name in enumerate(cfg.resource_names):
+        section = int(cfg.capacities[r])
         rel = ctx.cluster.release[name]   # estimated release time, 0 == free
-        k = rel.shape[0]
+        k = min(rel.shape[0], section)
+        rel = rel[:k]
         busy = rel > 0.0
         out[offset: offset + k] = ~busy                          # avail bit
-        ttf = out[offset + k: offset + 2 * k]
+        ttf = out[offset + section: offset + section + k]
         np.subtract(rel, ctx.now, out=ttf, where=busy)           # time-to-free
         np.maximum(ttf, 0.0, out=ttf)
         ttf /= cfg.time_scale
-        offset += 2 * k
+        offset += 2 * section
     return out
 
 

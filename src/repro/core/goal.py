@@ -18,29 +18,37 @@ from ..sim.simulator import SchedContext
 
 def goal_vector(ctx: SchedContext, resource_names: Sequence[str],
                 capacities: Sequence[int]) -> np.ndarray:
-    caps = np.maximum(np.asarray(capacities, dtype=np.float64), 1.0)
-    R = len(resource_names)
-    demand_time = np.zeros(R, dtype=np.float64)
+    names = tuple(resource_names)
+    R = len(names)
+    rng_r = range(R)
+    acc = [0.0] * R
 
     # Queued jobs (full queue, not just the window): user walltime estimate.
-    # Built as one (J, R) matvec — this runs on every scheduling decision,
-    # so per-job array construction would dominate the decision hot path.
+    # This runs on every scheduling decision, so the per-job demand rows
+    # come from Job.demand_row's instance cache and accumulate in plain
+    # Python floats — numpy per-job ops would pay ~1us dispatch each.
     queued = ctx.queue if ctx.queue is not None else ctx.window
     if queued:
-        dem = np.array([[j.demands.get(n, 0) for n in resource_names]
-                        for j in queued], dtype=np.float64)
-        wall = np.array([j.walltime for j in queued], dtype=np.float64)
-        demand_time += wall @ dem / caps
+        for j in queued:
+            w = j.walltime
+            row = j.demand_row(names)
+            for r in rng_r:
+                acc[r] += w * row[r]
 
     # Running jobs: remaining estimated time.
-    running = ctx.cluster.running_jobs()
-    if running:
-        dem = np.array([[rj.job.demands.get(n, 0) for n in resource_names]
-                        for rj in running], dtype=np.float64)
-        rem = np.array([max(rj.est_end - ctx.now, 0.0) for rj in running],
-                       dtype=np.float64)
-        demand_time += rem @ dem / caps
+    now = ctx.now
+    for rj in ctx.cluster.running.values():
+        rem = rj.est_end - now
+        if rem > 0.0:
+            row = rj.job.demand_row(names)
+            for r in rng_r:
+                acc[r] += rem * row[r]
 
+    if isinstance(capacities, np.ndarray) and capacities.dtype == np.float64:
+        caps = np.maximum(capacities, 1.0)   # hot path: no list conversion
+    else:
+        caps = np.maximum(np.asarray(capacities, dtype=np.float64), 1.0)
+    demand_time = np.asarray(acc, dtype=np.float64) / caps
     total = demand_time.sum()
     if total <= 0:
         return np.full(R, 1.0 / R, dtype=np.float32)

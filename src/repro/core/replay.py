@@ -1,9 +1,17 @@
-"""Episodic experience buffer for DFP training.
+"""Episodic experience buffer for DFP training (paper §II-B, §III-C).
 
-Stores one row per scheduling decision: (state, measurement, goal, action),
-grouped by episode so future-measurement targets
-f[tau, m] = m_{t+tau} - m_t can be materialized at sample time with
-episode-end clamping (offsets that cross the episode boundary are masked).
+DFP (Dosovitskiy & Koltun '17, as adapted by MRSch) is supervised on
+*future measurement deltas* rather than a scalar reward, so experience
+must stay grouped by episode: the buffer stores one row per scheduling
+decision — (state, measurement, goal, action) — and materializes targets
+f[tau, m] = m_{t+tau} - m_t at sample time with episode-end clamping
+(temporal offsets that cross the episode boundary are masked out of the
+loss).  ``EpisodeRecorder`` accumulates one trajectory at a time;
+``VectorEpisodeRecorder`` keeps one accumulator per environment slot so
+the batched rollout engine (``repro.sim.vector``) can collect N
+interleaved trajectories without corrupting any episode's future-delta
+targets; ``ReplayBuffer`` holds finished episodes up to a row budget and
+serves uniform minibatches to the jitted train step.
 """
 from __future__ import annotations
 
@@ -50,6 +58,39 @@ class EpisodeRecorder:
         return ep
 
 
+class VectorEpisodeRecorder:
+    """Per-environment episode accumulators for batched collection.
+
+    The lockstep rollout engine interleaves decisions from N environments;
+    routing each transition to its own slot keeps every episode contiguous
+    so the DFP future-measurement targets stay well-defined.  Slots are
+    created on first use, so one recorder serves any batch width.
+    """
+
+    def __init__(self, n_envs: int = 0):
+        self._slots: Dict[int, EpisodeRecorder] = {
+            i: EpisodeRecorder() for i in range(n_envs)}
+
+    def slot(self, i: int) -> EpisodeRecorder:
+        rec = self._slots.get(i)
+        if rec is None:
+            rec = self._slots[i] = EpisodeRecorder()
+        return rec
+
+    def record(self, i: int, state, meas, goal, action: int) -> None:
+        self.slot(i).record(state, meas, goal, action)
+
+    def finish(self, i: int) -> Optional[Episode]:
+        """Close slot ``i``'s episode (None if nothing was recorded)."""
+        return self.slot(i).finish()
+
+    def pending_rows(self) -> int:
+        return sum(len(r) for r in self._slots.values())
+
+    def __len__(self) -> int:
+        return len(self._slots)
+
+
 class ReplayBuffer:
     def __init__(self, offsets: Sequence[int], capacity_rows: int = 200_000):
         self.offsets = np.asarray(offsets, np.int64)
@@ -69,7 +110,12 @@ class ReplayBuffer:
         return self._rows
 
     def sample(self, rng: np.random.Generator, batch: int) -> Dict[str, np.ndarray]:
-        """Uniform sample over all stored rows; targets computed on the fly."""
+        """Uniform sample over all stored rows; targets computed on the fly.
+
+        Rows are gathered episode-by-episode with fancy indexing rather
+        than one python iteration per row — sampling sits on the training
+        hot path (``grad_steps_per_episode`` minibatches per episode).
+        """
         sizes = np.array([len(e.actions) for e in self.episodes])
         cum = np.cumsum(sizes)
         flat = rng.integers(0, cum[-1], size=batch)
@@ -87,16 +133,18 @@ class ReplayBuffer:
             "target": np.zeros((batch, T, M), np.float32),
             "target_mask": np.zeros((batch, T), np.float32),
         }
-        for b, (e, t) in enumerate(zip(ep_idx, row_idx)):
+        for e in np.unique(ep_idx):
+            sel = np.flatnonzero(ep_idx == e)
             ep = self.episodes[e]
             n = len(ep.actions)
-            out["state"][b] = ep.states[t]
-            out["meas"][b] = ep.meas[t]
-            out["goal"][b] = ep.goals[t]
-            out["action"][b] = ep.actions[t]
-            future = t + self.offsets
+            t = row_idx[sel]
+            out["state"][sel] = ep.states[t]
+            out["meas"][sel] = ep.meas[t]
+            out["goal"][sel] = ep.goals[t]
+            out["action"][sel] = ep.actions[t]
+            future = t[:, None] + self.offsets[None, :]
             valid = future < n
             fut = np.minimum(future, n - 1)
-            out["target"][b] = ep.meas[fut] - ep.meas[t]
-            out["target_mask"][b] = valid.astype(np.float32)
+            out["target"][sel] = ep.meas[fut] - ep.meas[t][:, None, :]
+            out["target_mask"][sel] = valid.astype(np.float32)
         return out

@@ -48,6 +48,21 @@ class Job:
             dtype=np.float64,
         )
 
+    def demand_row(self, names: tuple) -> tuple:
+        """Demanded units ordered by ``names``, cached on the instance.
+
+        Demands are fixed once a trace is built (simulators work on
+        copies), and this row is consumed on every scheduling decision by
+        the Eq. (1) goal computation — caching it removes a per-decision
+        dict-lookup loop from the hot path.
+        """
+        cached = self.__dict__.get("_demand_row")
+        if cached is not None and cached[0] == names:
+            return cached[1]
+        row = tuple(float(self.demands.get(n, 0)) for n in names)
+        self.__dict__["_demand_row"] = (names, row)
+        return row
+
     def copy(self) -> "Job":
         return Job(self.jid, self.submit, self.runtime, self.walltime,
                    dict(self.demands))

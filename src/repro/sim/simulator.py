@@ -84,6 +84,7 @@ class Simulator:
         self.acc = MetricsAccumulator(self.cluster)
         self._started = False
         self._in_pass = False     # inside a scheduling pass awaiting decisions
+        self._pending_ctx: Optional[SchedContext] = None
 
     # ------------------------------------------------------------ event api
     def _push(self, time: float, kind: str, payload) -> None:
@@ -117,7 +118,8 @@ class Simulator:
         while True:
             if self._in_pass:
                 if self.queue:
-                    return self._ctx()
+                    self._pending_ctx = self._ctx()
+                    return self._pending_ctx
                 self._in_pass = False
             if not self._events:
                 return None
@@ -143,7 +145,10 @@ class Simulator:
         backfilling, and ends the pass.
         """
         assert self._in_pass and self.queue, "no pending decision"
-        ctx = self._ctx()
+        # Reuse the context handed out by next_decision (nothing mutates
+        # between the two calls); rebuild only for direct post_action use.
+        ctx = self._pending_ctx if self._pending_ctx is not None else self._ctx()
+        self._pending_ctx = None
         self.decisions += 1
         a = max(0, min(int(action), len(ctx.window) - 1))
         job = ctx.window[a]
@@ -191,7 +196,7 @@ class Simulator:
             cluster=self.cluster,
             window=self.queue[: self.config.window],
             queue_len=len(self.queue),
-            running=[rj.job for rj in self.cluster.running_jobs()],
+            running=[rj.job for rj in self.cluster.running.values()],
             queue=self.queue,
         )
 

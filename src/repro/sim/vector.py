@@ -1,4 +1,4 @@
-"""Batched multi-environment rollout engine.
+"""Batched multi-environment rollout engine (ROADMAP scale+speed path).
 
 ``VectorSimulator`` advances N independent trace simulations in lockstep
 *rounds*: each round gathers the pending ``SchedContext`` from every
@@ -6,23 +6,32 @@ environment that needs a decision, hands the whole batch to the policy in
 ONE call (``select_batch`` — a single jitted DFP forward for the MRSch
 agent), scatters the selected actions back, and lets each environment's
 event loop run to its next decision point.  Environments that drain their
-event queues simply drop out of subsequent rounds.
+event queues drop out of subsequent rounds — or, when a ``refill``
+callback is supplied (the vectorized trainer in ``repro.core.train``),
+are immediately re-seeded with their next trace so the decision batch
+stays wide across a whole curriculum.  This mirrors the parallel episode
+collection that makes HPC-scheduling RL tractable in DRAS (Fan & Lan,
+arXiv:2102.06243) and related co-scheduler work (arXiv:2401.09706).
 
 Per-environment trajectories are identical to running each ``Simulator``
 alone: the engine only interleaves *when* decisions are computed, never
 what each environment observes — each context is built from that
 environment's own cluster/queue state at its own simulation clock.
 
-Batching requires a policy whose decision is a pure function of the
-context (the evaluation-mode MRSch agent, FCFS, ...).  Policies that keep
-cross-call state keyed to one trace (e.g. ``GAOptimizer``'s cached plan)
-should run through the sequential per-environment fallback, which this
-engine uses automatically whenever the policy lacks ``select_batch``.
+Batching requires a policy whose decision is a function of the context
+(the MRSch agent, FCFS, ...).  Policies whose ``select_batch`` accepts a
+``slots`` keyword (the MRSch agent in training mode) additionally receive
+the environment index of every context, so per-environment state such as
+episode accumulators stays separated.  Policies that keep cross-call
+state keyed to one trace (e.g. ``GAOptimizer``'s cached plan) should run
+through the sequential per-environment fallback, which this engine uses
+automatically whenever the policy lacks ``select_batch``.
 """
 from __future__ import annotations
 
+import inspect
 from dataclasses import dataclass
-from typing import List, Optional, Protocol, Sequence
+from typing import Callable, List, Optional, Protocol, Sequence
 
 import numpy as np
 
@@ -44,10 +53,12 @@ class VectorStats:
     decisions: int = 0           # total decisions across environments
     policy_calls: int = 0        # batched policy invocations
     max_batch: int = 0           # widest decision batch seen
+    episodes: int = 0            # environment episodes completed
 
     def as_dict(self) -> dict:
         return {"rounds": self.rounds, "decisions": self.decisions,
-                "policy_calls": self.policy_calls, "max_batch": self.max_batch}
+                "policy_calls": self.policy_calls,
+                "max_batch": self.max_batch, "episodes": self.episodes}
 
 
 class VectorSimulator:
@@ -65,6 +76,15 @@ class VectorSimulator:
         self.sims = list(sims)
         self.policy = policy
         self.stats = VectorStats()
+        select_batch = getattr(policy, "select_batch", None)
+        self._batched = select_batch is not None
+        self._slot_aware = False
+        if self._batched:
+            try:
+                params = inspect.signature(select_batch).parameters
+                self._slot_aware = "slots" in params
+            except (TypeError, ValueError):
+                pass
 
     @classmethod
     def from_jobsets(cls, resources: Sequence[ResourceSpec],
@@ -75,29 +95,67 @@ class VectorSimulator:
         return cls(sims, policy=policy)
 
     # ---------------------------------------------------------------- run
-    def run(self) -> List[SimResult]:
-        batched = self.policy is not None and hasattr(self.policy,
-                                                      "select_batch")
-        pending: List[Optional[SchedContext]] = [s.next_decision()
-                                                 for s in self.sims]
+    def _advance(self, i: int,
+                 refill: Optional[Callable[[int, SimResult],
+                                           Optional[Simulator]]],
+                 results: List[SimResult]) -> Optional[SchedContext]:
+        """Step env ``i`` to its next decision, refilling drained traces."""
+        while True:
+            ctx = self.sims[i].next_decision()
+            if ctx is not None:
+                return ctx
+            if refill is None:
+                return None
+            self.stats.episodes += 1
+            result = self.sims[i].result()
+            results.append(result)
+            nxt = refill(i, result)
+            if nxt is None:
+                return None
+            self.sims[i] = nxt
+
+    def run(self, refill=None, on_round=None) -> List[SimResult]:
+        """Drive all environments to completion; return their results.
+
+        refill(i, result) — called the moment environment ``i`` drains;
+            may return a fresh ``Simulator`` to continue collecting in
+            that slot (or None to retire it).  With a refill callback the
+            returned list holds every completed episode in completion
+            order; without one it holds exactly one result per slot, in
+            slot order.
+        on_round(round_idx, n_live) — called after each lockstep round's
+            actions are applied; the vectorized trainer hooks interleaved
+            gradient steps here.
+        """
+        results: List[SimResult] = []
+        pending: List[Optional[SchedContext]] = [
+            self._advance(i, refill, results)
+            for i in range(len(self.sims))]
         while True:
             live = [i for i, c in enumerate(pending) if c is not None]
             if not live:
                 break
             ctxs = [pending[i] for i in live]
-            if batched:
+            if self._slot_aware:
+                actions = np.asarray(self.policy.select_batch(ctxs,
+                                                              slots=live))
+            elif self._batched:
                 actions = np.asarray(self.policy.select_batch(ctxs))
             else:
                 actions = [self.sims[i].policy.select(c)
                            for i, c in zip(live, ctxs)]
-            self.stats.rounds += 1
-            self.stats.policy_calls += 1 if batched else len(live)
+            self.stats.policy_calls += 1 if self._batched else len(live)
             self.stats.decisions += len(live)
             self.stats.max_batch = max(self.stats.max_batch, len(live))
             for i, a in zip(live, actions):
                 self.sims[i].post_action(int(a))
-                pending[i] = self.sims[i].next_decision()
-        return [s.result() for s in self.sims]
+                pending[i] = self._advance(i, refill, results)
+            if on_round is not None:
+                on_round(self.stats.rounds, len(live))
+            self.stats.rounds += 1
+        if refill is None:
+            return [s.result() for s in self.sims]
+        return results
 
 
 def run_traces(resources: Sequence[ResourceSpec],

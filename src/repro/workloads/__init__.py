@@ -1,12 +1,14 @@
 from .jobsets import Curriculum, build_curriculum, real_jobsets, sampled_jobsets, synthetic_jobsets
 from .scenarios import SCENARIOS, build_scenarios, derive_scenario, with_power
-from .sweep import SweepTask, build_sweep, run_sweep
+from .sweep import (SweepTask, build_sweep, build_train_mix, run_sweep,
+                    scale_resources)
 from .theta import THETA_BB_UNITS, THETA_NODES, ThetaConfig, generate_trace, jobs_from_swf
 
 __all__ = [
     "Curriculum", "build_curriculum", "real_jobsets", "sampled_jobsets",
     "synthetic_jobsets", "SCENARIOS", "build_scenarios", "derive_scenario",
-    "with_power", "SweepTask", "build_sweep", "run_sweep",
+    "with_power", "SweepTask", "build_sweep", "build_train_mix", "run_sweep",
+    "scale_resources",
     "THETA_BB_UNITS", "THETA_NODES", "ThetaConfig",
     "generate_trace", "jobs_from_swf",
 ]

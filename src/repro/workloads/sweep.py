@@ -6,13 +6,19 @@ the (scenario, seed) task grid; ``run_sweep`` evaluates one policy over it
 either one trace at a time or through the batched
 ``repro.sim.VectorSimulator`` rollout engine, and reports decision
 throughput either way so the two modes can be compared apples-to-apples.
+``build_train_mix`` deals the same grid across the lockstep lanes of the
+vectorized trainer (``repro.core.train.train_agent_vectorized``) —
+optionally with scaled-down resource variants per lane — so one training
+batch spans heterogeneous traces, seeds, and contention regimes
+(exercising the paper's §III-B dynamic goal vectors heterogeneously).
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
+from ..core.train import EnvSlot
 from ..sim.cluster import ResourceSpec
 from ..sim.job import Job
 from ..sim.simulator import SimConfig, SimResult, Simulator
@@ -37,6 +43,51 @@ def build_sweep(cfg: ThetaConfig, scenarios: Sequence[str] = ("S1", "S2",
         for name in scenarios:
             out.append((SweepTask(name, seed), sets[name]))
     return out
+
+
+def scale_resources(resources: Sequence[ResourceSpec],
+                    scale: float) -> List[ResourceSpec]:
+    """Shrink a cluster spec (same resources, ``scale``x the units)."""
+    if not 0.0 < scale <= 1.0:
+        raise ValueError(f"scale must be in (0, 1], got {scale}")
+    return [ResourceSpec(r.name, max(1, round(r.capacity * scale)), r.unit)
+            for r in resources]
+
+
+def build_train_mix(cfg: ThetaConfig,
+                    scenarios: Sequence[str] = ("S1", "S2", "S3", "S4", "S5"),
+                    seeds: Sequence[int] = (1, 2, 3), n_envs: int = 8,
+                    power: bool = False,
+                    resource_scales: Optional[Sequence[float]] = None
+                    ) -> List[EnvSlot]:
+    """Heterogeneous lane assignments for the vectorized trainer.
+
+    Builds the (scenario x seed) trace grid and deals it round-robin
+    across ``n_envs`` lockstep lanes, so one training batch mixes
+    different workload scenarios and trace seeds.  ``resource_scales``
+    optionally cycles scaled-down cluster variants across the lanes
+    (e.g. ``(1.0, 0.75, 0.5)``), diversifying contention — and therefore
+    the Eq. (1) goal vectors the agent learns to condition on — within a
+    single batch.  The agent must be built on the unscaled ``cfg``
+    resources; smaller lanes are padded by the state encoding.
+    """
+    tasks = build_sweep(cfg, scenarios=scenarios, seeds=seeds, power=power)
+    n_envs = max(1, min(int(n_envs), len(tasks)))
+    base = cfg.resources(
+        power_budget_kw=cfg.default_power_budget_kw() if power else None)
+    slots: List[EnvSlot] = []
+    for i in range(n_envs):
+        res = base
+        tag = f"env{i}"
+        if resource_scales:
+            scale = resource_scales[i % len(resource_scales)]
+            res = scale_resources(base, scale)
+            tag = f"env{i}@{scale:g}x"
+        slots.append(EnvSlot(jobsets=[], resources=res, tag=tag))
+    for k, (task, jobs) in enumerate(tasks):
+        slots[k % n_envs].jobsets.append(
+            (f"{task.scenario}/seed{task.seed}", jobs))
+    return slots
 
 
 def _row(task: SweepTask, result: SimResult) -> Dict:

@@ -1,0 +1,153 @@
+"""Vectorized DFP training: N=1 seed-matched equivalence with the
+sequential driver, heterogeneous environment lanes, train-mix
+construction, and capacity-padded state encoding."""
+import numpy as np
+import pytest
+
+from repro.core import (AgentConfig, EnvSlot, MRSchAgent, TrainConfig,
+                        encode_state, slots_from_jobsets, train_agent,
+                        train_agent_vectorized)
+from repro.sim import Job, ResourceSpec, SimConfig, Simulator
+from repro.workloads import ThetaConfig, build_train_mix, scale_resources
+
+RES = [ResourceSpec("node", 16), ResourceSpec("bb", 8)]
+
+
+def synth_jobs(seed: int, n: int = 40):
+    rng = np.random.default_rng(seed)
+    jobs, t = [], 0.0
+    for i in range(n):
+        t += float(rng.exponential(40.0))
+        runtime = float(rng.uniform(20, 300))
+        jobs.append(Job(jid=i, submit=t, runtime=runtime,
+                        walltime=runtime * float(rng.uniform(1.0, 2.0)),
+                        demands={"node": int(rng.integers(1, 12)),
+                                 "bb": int(rng.integers(0, 6))}))
+    return jobs
+
+
+def small_agent(seed: int = 0, **over) -> MRSchAgent:
+    kw = dict(state_hidden=(32, 16), state_out=8, module_hidden=4,
+              stream_hidden=16, batch_size=16, grad_steps_per_episode=4,
+              eps_decay=0.9, seed=seed)
+    kw.update(over)
+    return MRSchAgent(RES, AgentConfig(**kw))
+
+
+def test_vectorized_n1_matches_sequential_training():
+    """The acceptance equivalence: an N=1 batched rollout consumes the
+    host RNG in the sequential order, so trajectories, metrics, losses,
+    and the epsilon schedule all match the classic driver exactly."""
+    jobsets = [synth_jobs(s) for s in range(3)]
+    a_seq, a_vec = small_agent(), small_agent()
+    seq = train_agent(a_seq, RES, jobsets)
+    vec = train_agent(a_vec, RES, jobsets, config=TrainConfig(n_envs=1))
+    assert seq.episode_metrics == vec.episode_metrics
+    assert seq.decisions == vec.decisions
+    assert len(seq.episode_losses) == len(vec.episode_losses) > 0
+    assert np.allclose(seq.episode_losses, vec.episode_losses,
+                       rtol=1e-6, atol=0.0)
+    assert a_seq.epsilon == a_vec.epsilon
+    assert a_seq.replay.rows == a_vec.replay.rows
+
+
+def test_vectorized_training_multi_env_learns():
+    """N=3 lanes with heterogeneous traces AND cluster scales: every
+    jobset becomes one trained episode, epsilon decays, and the agent
+    still serves batched evaluation afterwards."""
+    slots = [
+        EnvSlot(jobsets=[("a", synth_jobs(1)), ("b", synth_jobs(2))],
+                resources=RES, tag="full"),
+        EnvSlot(jobsets=[("c", synth_jobs(3))],
+                resources=scale_resources(RES, 0.75), tag="mid"),
+        EnvSlot(jobsets=[("d", synth_jobs(4, n=25))],
+                resources=scale_resources(RES, 0.5), tag="half"),
+    ]
+    agent = small_agent()
+    log = train_agent_vectorized(agent, slots, TrainConfig(n_envs=3))
+    assert len(log.episodes) == 4
+    assert {e["tag"] for e in log.episodes} == {"full", "mid", "half"}
+    assert log.decisions == sum(e["decisions"] for e in log.episodes)
+    assert log.episode_losses and agent.losses
+    assert agent.epsilon < 1.0
+    assert agent.replay.rows > 0
+    assert not agent.training
+    # evaluation-mode batched selection still works after training
+    sim = Simulator(RES, synth_jobs(9), agent)
+    ctx = sim.next_decision()
+    acts = agent.select_batch([ctx, ctx])
+    assert list(acts) == [agent.select(ctx)] * 2
+
+
+def test_vectorized_interleaved_round_grad_steps():
+    """grad_steps_per_round>0 trains the network mid-collection, once the
+    replay buffer can fill a minibatch."""
+    agent = small_agent(batch_size=8)
+    # Lane 1 finishes early, filling the replay buffer while lane 0 is
+    # still mid-trace; the remaining rounds each take a gradient step.
+    slots = slots_from_jobsets(RES, [synth_jobs(1, n=40),
+                                     synth_jobs(2, n=12)], 2)
+    log = train_agent_vectorized(
+        agent, slots, TrainConfig(n_envs=2, grad_steps_per_round=1))
+    assert len(log.round_losses) > 0
+    assert log.rounds > 0
+
+
+def test_slots_from_jobsets_round_robin():
+    jobsets = [synth_jobs(s, n=5) for s in range(5)]
+    slots = slots_from_jobsets(RES, jobsets, 2)
+    assert [len(s.jobsets) for s in slots] == [3, 2]
+    assert [label for s in slots for label, _ in s.jobsets] == \
+        ["set0", "set2", "set4", "set1", "set3"]
+    # never more lanes than jobsets
+    assert len(slots_from_jobsets(RES, jobsets, 16)) == 5
+
+
+def test_build_train_mix_grid_and_scales():
+    cfg = ThetaConfig.mini(seed=0, duration_days=0.3, jobs_per_day=80)
+    mix = build_train_mix(cfg, scenarios=("S1", "S2"), seeds=(1, 2),
+                          n_envs=3, resource_scales=(1.0, 0.5))
+    assert len(mix) == 3
+    labels = [label for slot in mix for label, _ in slot.jobsets]
+    assert sorted(labels) == ["S1/seed1", "S1/seed2", "S2/seed1", "S2/seed2"]
+    full = {r.name: r.capacity for r in mix[0].resources}
+    half = {r.name: r.capacity for r in mix[1].resources}
+    assert half["node"] == max(1, round(full["node"] * 0.5))
+    assert mix[1].tag.endswith("@0.5x")
+    with pytest.raises(ValueError):
+        scale_resources(RES, 1.5)
+
+
+def test_encode_state_pads_smaller_cluster():
+    """A scaled-down lane keeps the reference layout: absent units read
+    as unavailable and the vector length never changes."""
+    agent = small_agent()
+    enc = agent.enc
+    jobs = synth_jobs(0, n=6)
+    for j in jobs:
+        j.demands = {"node": 2, "bb": 1}
+    small = scale_resources(RES, 0.5)          # node 8, bb 4
+    sim = Simulator(small, jobs, agent, SimConfig(window=enc.window))
+    ctx = sim.next_decision()
+    state = encode_state(enc, ctx)
+    assert state.shape == (enc.state_dim,)
+    base = enc.window * enc.job_dim
+    # node section: first 8 unit slots live, padded 8 read unavailable
+    assert state[base: base + 8].max() == 1.0
+    assert np.all(state[base + 8: base + 16] == 0.0)
+    # demand fractions normalized by the lane's own capacity (2/8, 1/4)
+    assert state[0] == pytest.approx(2 / 8)
+    assert state[1] == pytest.approx(1 / 4)
+
+
+def test_lane_resources_validated():
+    agent = small_agent()
+    bad_names = [EnvSlot(jobsets=[("x", synth_jobs(0, n=3))],
+                         resources=[ResourceSpec("gpu", 4)], tag="bad")]
+    with pytest.raises(ValueError, match="do not match"):
+        train_agent_vectorized(agent, bad_names, TrainConfig(n_envs=1))
+    too_big = [EnvSlot(jobsets=[("x", synth_jobs(0, n=3))],
+                       resources=[ResourceSpec("node", 32),
+                                  ResourceSpec("bb", 8)], tag="big")]
+    with pytest.raises(ValueError, match="exceeds"):
+        train_agent_vectorized(agent, too_big, TrainConfig(n_envs=1))

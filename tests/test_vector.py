@@ -82,15 +82,24 @@ def test_select_batch_matches_select():
     assert list(batch) == singles
 
 
-def test_select_batch_refuses_training_mode():
-    """Interleaving envs through one episode recorder would corrupt the
-    DFP targets, so batched selection is evaluation-only."""
+def test_select_batch_training_requires_slots():
+    """Interleaving envs without per-env routing would corrupt the DFP
+    future-measurement targets, so training-mode batched selection
+    demands slot ids; with them, transitions land in the per-env episode
+    accumulators."""
     agent = small_agent()
     sim = Simulator(RES, synth_jobs(0), agent)
     ctx = sim.next_decision()
     agent.training = True
     with pytest.raises(RuntimeError, match="evaluation-only"):
         agent.select_batch([ctx])
+    agent.begin_vector_episodes(2)
+    agent.select_batch([ctx, ctx], slots=[0, 1])
+    agent.select_batch([ctx], slots=[1])
+    assert len(agent.vec_recorder.slot(0)) == 1
+    assert len(agent.vec_recorder.slot(1)) == 2
+    assert agent.vec_recorder.finish(0) is not None
+    assert agent.vec_recorder.finish(0) is None
 
 
 def test_vector_stats_show_batching():

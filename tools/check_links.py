@@ -1,0 +1,101 @@
+#!/usr/bin/env python3
+"""Fail on broken intra-repo links in README.md and docs/*.md.
+
+Checks every markdown link target that is not an external URL:
+  * relative file targets must exist on disk;
+  * ``path#fragment`` / ``#fragment`` anchors must match a heading slug
+    in the target (GitHub-style slugification).
+
+Run from anywhere:  python tools/check_links.py  [files...]
+Exit code 1 and one line per broken link on failure.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+LINK_RE = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+INLINE_CODE_RE = re.compile(r"`[^`]*`")
+FENCE_RE = re.compile(r"^(```|~~~)")
+EXTERNAL = ("http://", "https://", "mailto:", "ftp://")
+
+
+def heading_slugs(path: Path) -> set:
+    """GitHub-style anchors for every markdown heading in ``path``."""
+    slugs = set()
+    in_fence = False
+    for line in path.read_text(encoding="utf-8").splitlines():
+        if FENCE_RE.match(line.strip()):
+            in_fence = not in_fence
+            continue
+        if in_fence or not line.startswith("#"):
+            continue
+        title = line.lstrip("#").strip()
+        title = re.sub(r"[`*_]", "", title)
+        slug = re.sub(r"[^\w\- ]", "", title.lower()).strip()
+        slugs.add(re.sub(r" +", "-", slug))
+    return slugs
+
+
+def iter_links(path: Path):
+    """(line_number, target) for every markdown link outside code."""
+    in_fence = False
+    for ln, line in enumerate(path.read_text(encoding="utf-8").splitlines(),
+                              start=1):
+        if FENCE_RE.match(line.strip()):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        for match in LINK_RE.finditer(INLINE_CODE_RE.sub("", line)):
+            yield ln, match.group(1)
+
+
+def _rel(path: Path) -> str:
+    try:
+        return str(path.relative_to(REPO))
+    except ValueError:
+        return str(path)
+
+
+def check_file(path: Path) -> list:
+    errors = []
+    for ln, target in iter_links(path):
+        if target.startswith(EXTERNAL):
+            continue
+        base, _, fragment = target.partition("#")
+        dest = path if not base else (path.parent / base).resolve()
+        if base and not dest.exists():
+            errors.append(f"{_rel(path)}:{ln}: broken link "
+                          f"-> {target} (no such file)")
+            continue
+        if fragment and dest.suffix == ".md":
+            if fragment not in heading_slugs(dest):
+                errors.append(f"{_rel(path)}:{ln}: broken anchor "
+                              f"-> {target} (no matching heading)")
+    return errors
+
+
+def main(argv) -> int:
+    if argv:
+        files = [Path(a).resolve() for a in argv]
+    else:
+        files = [REPO / "README.md"] + sorted((REPO / "docs").glob("*.md"))
+    missing = [f for f in files if not f.exists()]
+    errors = [f"missing input file: {f}" for f in missing]
+    for f in files:
+        if f.exists():
+            errors.extend(check_file(f))
+    for e in errors:
+        print(e)
+    n_files = len(files) - len(missing)
+    if not errors:
+        print(f"ok: {n_files} files, all intra-repo links resolve")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
