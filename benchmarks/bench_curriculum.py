@@ -34,8 +34,19 @@ THROUGHPUT_AGENT = AgentConfig(
     batch_size=32, grad_steps_per_episode=8, eps_decay=0.75, seed=0)
 
 
-def vector_training(quick: bool = True, seed: int = 0, n_envs: int = 8):
-    """Sequential vs N-env lockstep training on an identical jobset grid."""
+def vector_training(quick: bool = True, seed: int = 0, n_envs: int = 8,
+                    backend: str | None = None):
+    """Sequential vs N-env lockstep training on an identical jobset grid.
+
+    ``backend`` routes BOTH arms through the chosen NN backend
+    ("xla" default; "pallas" = fused-MLP kernels), so the reported
+    vector-vs-sequential speedup isolates the rollout engine while the
+    backend choice shows up in absolute decisions/sec.
+    """
+    from dataclasses import replace as dc_replace
+
+    agent_cfg = THROUGHPUT_AGENT if backend is None else \
+        dc_replace(THROUGHPUT_AGENT, backend=backend)
     cfg = ThetaConfig.mini(seed=seed, duration_days=1.3 if quick else 3.0,
                            jobs_per_day=140)
     res = cfg.resources()
@@ -49,19 +60,20 @@ def vector_training(quick: bool = True, seed: int = 0, n_envs: int = 8):
     # Warm the jit cache for BOTH timed arms: the vectorized run compiles
     # the pow-of-2 batched forwards + the scanned train step, the short
     # sequential run compiles the single-decision forward (_values).
-    warm = MRSchAgent(res, THROUGHPUT_AGENT)
+    warm = MRSchAgent(res, agent_cfg)
     train_agent(warm, res, jobsets[:n_envs],
                 config=TrainConfig(n_envs=n_envs))
-    warm_seq = MRSchAgent(res, THROUGHPUT_AGENT)
+    warm_seq = MRSchAgent(res, agent_cfg)
     train_agent(warm_seq, res, jobsets[:1])
 
-    a_seq = MRSchAgent(res, THROUGHPUT_AGENT)
+    a_seq = MRSchAgent(res, agent_cfg)
     seq = train_agent(a_seq, res, jobsets)
-    a_vec = MRSchAgent(res, THROUGHPUT_AGENT)
+    a_vec = MRSchAgent(res, agent_cfg)
     vec = train_agent(a_vec, res, jobsets,
                       config=TrainConfig(n_envs=n_envs))
     out = {
         "n_envs": n_envs,
+        "backend": backend or "xla",
         "n_jobsets": len(jobsets),
         "jobsets": labels,
         "sequential": {
@@ -83,7 +95,7 @@ def vector_training(quick: bool = True, seed: int = 0, n_envs: int = 8):
     return out
 
 
-def run(quick: bool = True, seed: int = 0):
+def run(quick: bool = True, seed: int = 0, backend: str | None = None):
     train_cfg, res = mini_setup(seed=seed + 1, duration_days=3.0)
     trace = build_scenarios(train_cfg, names=("S2",))["S2"]
     cur = build_curriculum(train_cfg, trace, n_sampled=3, n_real=2, n_synth=3,
@@ -96,19 +108,33 @@ def run(quick: bool = True, seed: int = 0):
             "losses": [round(float(l), 5) for l in losses],
             "final_loss": float(np.mean(losses[-2:])) if losses else None,
         }
-    out["vector_training"] = vector_training(quick=quick, seed=seed)
+    out["vector_training"] = vector_training(quick=quick, seed=seed,
+                                             backend=backend)
     save_json("curriculum", out)
     return out
 
 
 if __name__ == "__main__":
-    o = run()
-    for k, v in o.items():
-        if k == "vector_training":
-            continue
-        print(k, "final:", v["final_loss"])
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--backend", default=None, choices=("xla", "pallas"),
+                    help="NN backend for the training-throughput arms")
+    ap.add_argument("--throughput-only", action="store_true",
+                    help="skip the Fig. 4 ordering ablation")
+    args = ap.parse_args()
+    if args.throughput_only:
+        o = {"vector_training": vector_training(quick=not args.full,
+                                                backend=args.backend)}
+    else:
+        o = run(quick=not args.full, backend=args.backend)
+        for k, v in o.items():
+            if k == "vector_training":
+                continue
+            print(k, "final:", v["final_loss"])
     vt = o["vector_training"]
-    print(f"vector training [N={vt['n_envs']}]: "
+    print(f"vector training [N={vt['n_envs']}, {vt['backend']}]: "
           f"seq={vt['sequential']['decisions_per_sec']}/s "
           f"vec={vt['vectorized']['decisions_per_sec']}/s "
           f"speedup={vt['speedup']}x")

@@ -1,13 +1,114 @@
-"""Fig. 3: MLP vs CNN state module ablation."""
+"""Fig. 3: MLP vs CNN state module ablation — plus the NN-backend
+microbench (xla vs pallas fused-MLP) over the padded decision batches
+the rollout engine actually produces.
+
+CLI:
+    python -m benchmarks.bench_state_module                   # Fig. 3
+    python -m benchmarks.bench_state_module --backend pallas  # backend
+        microbench: forward + grad timings per batch shape, speedup vs
+        xla, written to results/bench/BENCH_state_module.json; add
+        --update-baseline to refresh the committed perf-trajectory
+        baseline benchmarks/baselines/BENCH_state_module.json.
+"""
 from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
 
 from repro.core import evaluate
 from repro.workloads import build_curriculum, build_scenarios
 
 from .common import kiviat_scores, metric_row, mini_setup, save_json, train_mrsch
 
+BASELINE_DIR = os.path.join(os.path.dirname(__file__), "baselines")
 
-def run(quick: bool = True, seed: int = 0):
+# Mini (quick) and paper-scale state-module MLP shapes [in, h1, h2, out].
+QUICK_SIZES = [712, 1024, 256, 128]
+FULL_SIZES = [11410, 4000, 1000, 512]
+# Padded decision-batch widths: _greedy_rows pads a rollout round to the
+# next power of two, so these are the M shapes the kernel really sees
+# (1 = sequential select, 8/16 = typical lane counts, 64 = train batch).
+BATCH_WIDTHS = (1, 8, 16, 64)
+
+
+def _time_fn(fn, *args, iters: int = 5):
+    import jax
+    jax.block_until_ready(fn(*args))              # warm the jit cache
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters
+
+
+def backend_microbench(quick: bool = True, seed: int = 0,
+                       backend: str = "pallas", iters: int = 5,
+                       baseline_path: str | None = None):
+    """Forward + gradient timings of the DFP state-module MLP on the
+    requested backend vs the xla reference, per padded batch width.
+
+    Always writes results/bench/BENCH_state_module.json (gitignored
+    scratch); refreshes the committed baseline only when
+    ``baseline_path`` is given (CLI: --update-baseline)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.nn.backend import mlp_forward, resolve_backend
+    from repro.nn.modules import mlp_init
+
+    resolve_backend(backend)
+    sizes = QUICK_SIZES if quick else FULL_SIZES
+    params = mlp_init(jax.random.PRNGKey(seed), sizes)
+
+    def make_fns(bk):
+        fwd = jax.jit(lambda p, x: mlp_forward(
+            p, x, final_activation="leaky_relu", backend=bk))
+        loss = jax.jit(jax.grad(lambda p, x: mlp_forward(
+            p, x, final_activation="leaky_relu", backend=bk).sum()))
+        return fwd, loss
+
+    shapes = []
+    for width in BATCH_WIDTHS:
+        x = jax.random.normal(jax.random.fold_in(
+            jax.random.PRNGKey(seed), width), (width, sizes[0]), jnp.float32)
+        row = {"batch": width, "sizes": sizes}
+        for bk in dict.fromkeys(("xla", backend)):   # no double-timing xla
+            fwd, grad = make_fns(bk)
+            row[f"{bk}_fwd_us"] = round(_time_fn(fwd, params, x,
+                                                 iters=iters) * 1e6, 1)
+            row[f"{bk}_grad_us"] = round(_time_fn(grad, params, x,
+                                                  iters=iters) * 1e6, 1)
+        if backend != "xla":
+            row["fwd_speedup_vs_xla"] = round(
+                row["xla_fwd_us"] / max(row[f"{backend}_fwd_us"], 1e-9), 3)
+            row["grad_speedup_vs_xla"] = round(
+                row["xla_grad_us"] / max(row[f"{backend}_grad_us"], 1e-9), 3)
+        shapes.append(row)
+
+    out = {
+        "bench": "state_module_backend",
+        "backend": backend,
+        "platform": jax.default_backend(),
+        "interpret": jax.default_backend() != "tpu",
+        "quick": quick,
+        "iters": iters,
+        "shapes": shapes,
+        "note": ("interpret-mode Pallas on CPU is expected to trail XLA; "
+                 "the committed baseline tracks the trajectory so compiled "
+                 "TPU runs have a reference point"),
+    }
+    save_json("BENCH_state_module", out)
+    if baseline_path:
+        os.makedirs(os.path.dirname(baseline_path), exist_ok=True)
+        with open(baseline_path, "w") as f:
+            json.dump(out, f, indent=1)
+    return out
+
+
+def run(quick: bool = True, seed: int = 0, backend: str | None = None):
+    if backend:
+        return backend_microbench(quick=quick, seed=seed, backend=backend)
     cfg, res = mini_setup(seed=seed)
     train_cfg, _ = mini_setup(seed=seed + 1, duration_days=3.0)
     trace = build_scenarios(train_cfg, names=("S2",))["S2"]
@@ -27,5 +128,29 @@ def run(quick: bool = True, seed: int = 0):
 
 
 if __name__ == "__main__":
-    o = run()
-    print(o["kiviat"])
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--backend", default=None, choices=("xla", "pallas"),
+                    help="run the NN-backend microbench instead of Fig. 3")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="also refresh the committed "
+                         "benchmarks/baselines/BENCH_state_module.json")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    if args.backend:
+        o = backend_microbench(
+            quick=not args.full, seed=args.seed, backend=args.backend,
+            baseline_path=os.path.join(BASELINE_DIR,
+                                       "BENCH_state_module.json")
+            if args.update_baseline else None)
+    else:
+        o = run(quick=not args.full, seed=args.seed)
+    if args.backend:
+        for row in o["shapes"]:
+            print(f"batch={row['batch']:>3} "
+                  f"xla fwd={row['xla_fwd_us']}us "
+                  f"{args.backend} fwd={row[f'{args.backend}_fwd_us']}us "
+                  f"speedup={row.get('fwd_speedup_vs_xla', 1.0)}x "
+                  f"(grad {row.get('grad_speedup_vs_xla', 1.0)}x)")
+    else:
+        print(o["kiviat"])

@@ -30,6 +30,9 @@ def main() -> None:
     ap.add_argument("--vector", type=int, default=0,
                     help="batched rollout width for the scheduling sweep "
                          "(0 = sequential only)")
+    ap.add_argument("--backend", default=None, choices=("xla", "pallas"),
+                    help="NN backend for the state-module/curriculum "
+                         "benches (None = xla + Fig. 3 ablation)")
     args = ap.parse_args()
     quick = not args.full
 
@@ -40,8 +43,10 @@ def main() -> None:
     benches = {
         "overhead_vF": lambda: bench_overhead.run(quick=quick),
         "roofline_g": lambda: bench_roofline.run(quick=quick),
-        "state_module_fig3": lambda: bench_state_module.run(quick=quick),
-        "curriculum_fig4": lambda: bench_curriculum.run(quick=quick),
+        "state_module_fig3": lambda: bench_state_module.run(
+            quick=quick, backend=args.backend),
+        "curriculum_fig4": lambda: bench_curriculum.run(
+            quick=quick, backend=args.backend),
         "scheduling_fig5_6_7": lambda: bench_scheduling.run(
             quick=quick, vector=args.vector),
         "goal_adaptation_fig8_9": lambda: bench_goal_adaptation.run(quick=quick),
@@ -77,8 +82,13 @@ def main() -> None:
                 derived += (f";sweep_speedup_N{sw['n_envs']}="
                             f"{sw['decision_throughput_speedup']:.2f}x")
         elif name == "state_module_fig3":
-            k = out["kiviat"]
-            derived = f"MLP={k.get('MLP', 0):.3f};CNN={k.get('CNN', 0):.3f}"
+            if "kiviat" in out:
+                k = out["kiviat"]
+                derived = f"MLP={k.get('MLP', 0):.3f};CNN={k.get('CNN', 0):.3f}"
+            else:           # --backend microbench variant
+                s = out["shapes"][-1]
+                derived = (f"backend={out['backend']};fwd_speedup="
+                           f"{s.get('fwd_speedup_vs_xla', 1.0)}x")
         elif name == "curriculum_fig4":
             fl = {k: v["final_loss"] for k, v in out.items()
                   if k != "vector_training"}

@@ -30,6 +30,9 @@ def main():
                          "collection (1 = batched engine, single lane)")
     ap.add_argument("--sequential", action="store_true",
                     help="use the classic one-trace-at-a-time loop")
+    ap.add_argument("--backend", default="xla", choices=("xla", "pallas"),
+                    help="NN execution backend (pallas = fused-MLP "
+                         "kernels; see docs/pallas_backend.md)")
     ap.add_argument("--out", default="results/mrsch_agent.npz")
     args = ap.parse_args()
 
@@ -44,7 +47,8 @@ def main():
 
     agent = MRSchAgent(res, AgentConfig(
         state_hidden=(1024, 256), state_out=128, module_hidden=64,
-        grad_steps_per_episode=24, batch_size=48, eps_decay=0.95))
+        grad_steps_per_episode=24, batch_size=48, eps_decay=0.95,
+        backend=args.backend))
     train_config = None if args.sequential else TrainConfig(
         n_envs=max(1, args.vector), verbose=True)
     t0 = time.time()

@@ -33,9 +33,32 @@ def _flatten(tree):
     return paths, leaves, jax.tree_util.tree_structure(tree)
 
 
+_NPZ_NATIVE = (np.float32, np.float64, np.int32, np.int64,
+               np.uint8, np.int8, np.uint16, np.int16,
+               np.float16, np.bool_, np.uint32, np.uint64)
+
+
+def _resolve_dtype(name: str) -> np.dtype:
+    """True dtype from its manifest name: numpy natives (complex64, ...)
+    resolve directly, ml_dtypes extensions (bfloat16, float8_*) by
+    attribute lookup."""
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes
+        return np.dtype(getattr(ml_dtypes, name))
+
+
 def save_pytree(tree, directory: str, step: int, extra: Optional[dict] = None
                 ) -> str:
-    """Atomic synchronous save."""
+    """Atomic synchronous save.
+
+    Leaves whose dtype npz can't store natively are byte-viewed:
+    2-byte dtypes (bfloat16) as uint16 with the same shape, everything
+    else (fp8, complex, ...) as uint8 with a trailing itemsize axis.
+    The manifest always records the *logical* shape and dtype, so
+    ``restore_pytree`` can invert either view.
+    """
     final = os.path.join(directory, f"step_{step:08d}")
     tmp = final + ".tmp"
     os.makedirs(tmp, exist_ok=True)
@@ -45,16 +68,15 @@ def save_pytree(tree, directory: str, step: int, extra: Optional[dict] = None
     for i, (p, leaf) in enumerate(zip(paths, leaves)):
         arr = np.asarray(jax.device_get(leaf))
         true_dtype = str(arr.dtype)
-        if arr.dtype not in (np.float32, np.float64, np.int32, np.int64,
-                             np.uint8, np.int8, np.uint16, np.int16,
-                             np.float16, np.bool_, np.uint32, np.uint64):
+        shape = list(arr.shape)
+        if arr.dtype not in _NPZ_NATIVE:
+            arr = np.ascontiguousarray(arr)
             arr = arr.view(np.uint16) if arr.itemsize == 2 \
                 else arr.view(np.uint8).reshape(*arr.shape, arr.itemsize)
         key = f"a{i}"
         arrays[key] = arr
         manifest["leaves"].append(
-            {"path": p, "key": key, "shape": list(arr.shape),
-             "dtype": true_dtype})
+            {"path": p, "key": key, "shape": shape, "dtype": true_dtype})
     np.savez(os.path.join(tmp, "shard_000.npz"), **arrays)
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
@@ -82,15 +104,19 @@ def restore_pytree(template, directory: str, step: Optional[int] = None,
     shard_leaves = (jax.tree_util.tree_leaves(
         shardings, is_leaf=lambda x: x is None) if shardings is not None
         else [None] * len(leaves))
-    dtype_by_path = {leaf["path"]: leaf["dtype"]
-                     for leaf in manifest["leaves"]}
+    meta_by_path = {leaf["path"]: leaf for leaf in manifest["leaves"]}
     out = []
     for p, leaf, sh in zip(paths, leaves, shard_leaves):
         arr = by_path[p]
-        true_dtype = dtype_by_path[p]
-        if str(arr.dtype) != true_dtype:          # bf16 stored as uint16
-            import ml_dtypes
-            arr = arr.view(np.dtype(getattr(ml_dtypes, true_dtype)))
+        meta = meta_by_path[p]
+        true_dtype = meta["dtype"]
+        if str(arr.dtype) != true_dtype:          # byte-viewed on save
+            dt = _resolve_dtype(true_dtype)
+            arr = np.ascontiguousarray(arr)
+            if arr.dtype == np.uint8:             # (*shape, itemsize) bytes
+                arr = arr.reshape(-1).view(dt).reshape(meta["shape"])
+            else:                                 # 2-byte view, same shape
+                arr = arr.view(dt)
         if list(arr.shape) != list(leaf.shape):
             raise ValueError(f"shape mismatch for {p}: ckpt {arr.shape} "
                              f"vs template {leaf.shape}")
@@ -109,12 +135,19 @@ def latest_step(directory: str) -> Optional[int]:
 
 
 class CheckpointManager:
-    """Async save + retention policy + preemption-safe flush."""
+    """Async save + retention policy + preemption-safe flush.
+
+    A failed background save (full disk, bad dtype, ...) is never
+    silent: the worker exception is captured and re-raised from
+    ``wait()`` — and therefore from the next ``save_async``/``save``/
+    ``restore_latest``, which all flush first.
+    """
 
     def __init__(self, directory: str, keep: int = 3):
         self.directory = directory
         self.keep = keep
         self._thread: Optional[threading.Thread] = None
+        self._async_exc: Optional[BaseException] = None
         os.makedirs(directory, exist_ok=True)
 
     def save_async(self, tree, step: int, extra: Optional[dict] = None):
@@ -124,8 +157,11 @@ class CheckpointManager:
         host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
 
         def work():
-            save_pytree(host_tree, self.directory, step, extra)
-            self._gc()
+            try:
+                save_pytree(host_tree, self.directory, step, extra)
+                self._gc()
+            except BaseException as e:          # surfaced by wait()
+                self._async_exc = e
 
         self._thread = threading.Thread(target=work, daemon=True)
         self._thread.start()
@@ -136,9 +172,13 @@ class CheckpointManager:
         self._gc()
 
     def wait(self):
+        """Join any in-flight async save; re-raise its failure, if any."""
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._async_exc is not None:
+            exc, self._async_exc = self._async_exc, None
+            raise exc
 
     def restore_latest(self, template, shardings=None):
         self.wait()

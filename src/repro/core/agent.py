@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..nn.backend import resolve_backend
 from ..nn.optim import AdamState, adam_init, adam_update
 from ..sim.cluster import ResourceSpec
 from ..sim.simulator import SchedContext
@@ -39,6 +40,7 @@ class AgentConfig:
     eps_decay: float = 0.995          # paper §IV-C: alpha = 0.995
     eps_min: float = 0.02
     state_module: str = "mlp"         # "mlp" | "cnn"
+    backend: str = "xla"              # "xla" | "pallas" (fused-MLP kernel)
     state_hidden: Tuple[int, ...] = (4000, 1000)
     state_out: int = 512
     module_hidden: int = 128
@@ -99,6 +101,7 @@ class MRSchAgent:
             offsets=config.offsets,
             temporal_weights=config.temporal_weights,
             state_module=config.state_module,
+            backend=config.backend,
             state_hidden=config.state_hidden,
             state_out=config.state_out,
             module_hidden=config.module_hidden,
@@ -115,6 +118,17 @@ class MRSchAgent:
         self.training = False
         self.losses: List[float] = []
         self.goal_log: List[np.ndarray] = []
+
+    def set_backend(self, backend: str) -> None:
+        """Switch the NN execution backend ("xla" | "pallas") in place.
+
+        Parameters are backend-agnostic (same pytree layout), so a
+        checkpointed agent can be restored and re-run on either
+        backend; the jitted forwards re-specialize on the new
+        ``DFPConfig`` automatically (it is a static argument).
+        """
+        self.dfp = replace(self.dfp, backend=resolve_backend(backend))
+        self.config = replace(self.config, backend=backend)
 
     # ---------------------------------------------------------------- policy
     def _ctx_goal(self, ctx: SchedContext) -> np.ndarray:

@@ -32,8 +32,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..nn.backend import mlp_forward, resolve_backend
 from ..nn.modules import (conv1d_apply, conv1d_init, dense_apply, dense_init,
-                          leaky_relu, mlp_apply, mlp_init)
+                          leaky_relu, mlp_init)
 
 
 @dataclass(frozen=True)
@@ -51,6 +52,10 @@ class DFPConfig:
     cnn_channels: Tuple[int, ...] = (8, 16)
     cnn_width: int = 9
     cnn_stride: int = 4
+    backend: str = "xla"                      # "xla" | "pallas" (fused kernel)
+
+    def __post_init__(self):
+        resolve_backend(self.backend)
 
     @property
     def n_offsets(self) -> int:
@@ -96,7 +101,9 @@ def init_params(key: jax.Array, cfg: DFPConfig):
 
 def _state_features(params, cfg: DFPConfig, state: jnp.ndarray) -> jnp.ndarray:
     if cfg.state_module == "mlp":
-        return leaky_relu(mlp_apply(params["state"], state))
+        return mlp_forward(params["state"], state,
+                           final_activation="leaky_relu", backend=cfg.backend)
+    # CNN ablation stays on plain XLA ops (conv has no fused kernel).
     x = state[..., :, None]                       # (B, L, 1)
     for conv in params["state"]["convs"]:
         x = leaky_relu(conv1d_apply(conv, x, stride=cfg.cnn_stride))
@@ -110,13 +117,18 @@ def predict(params, cfg: DFPConfig, state: jnp.ndarray, meas: jnp.ndarray,
 
     state (B, state_dim), meas (B, M), goal (B, M)
     -> predictions (B, A, T, M): per-action future measurement deltas.
+
+    Every dense module dispatches on ``cfg.backend``: plain XLA ops or
+    the fused-MLP Pallas kernel (forward and backward).
     """
     s = _state_features(params, cfg, state)
-    m = leaky_relu(mlp_apply(params["measurement"], meas))
-    g = leaky_relu(mlp_apply(params["goal"], goal))
+    m = mlp_forward(params["measurement"], meas,
+                    final_activation="leaky_relu", backend=cfg.backend)
+    g = mlp_forward(params["goal"], goal,
+                    final_activation="leaky_relu", backend=cfg.backend)
     j = jnp.concatenate([s, m, g], axis=-1)
-    e = mlp_apply(params["expectation"], j)                       # (B, T*M)
-    a = mlp_apply(params["action"], j)                            # (B, A*T*M)
+    e = mlp_forward(params["expectation"], j, backend=cfg.backend)  # (B, T*M)
+    a = mlp_forward(params["action"], j, backend=cfg.backend)       # (B, A*T*M)
     a = a.reshape(*a.shape[:-1], cfg.n_actions, cfg.pred_dim)
     a = a - a.mean(axis=-2, keepdims=True)                        # dueling norm
     p = e[..., None, :] + a                                       # (B, A, T*M)
@@ -163,15 +175,24 @@ def greedy_actions_packed(params, cfg: DFPConfig, packed) -> jnp.ndarray:
     per-call host->device transfer overhead on every input array, so the
     rollout engine ships a single buffer and we slice it on device.
 
-    ``vmap`` over the single-decision scorer, so each row's own goal
-    vector weights its own prediction — environments with heterogeneous
-    goals (different contention regimes, Eq. 1) batch together correctly.
+    On the ``xla`` backend this is a ``vmap`` over the single-decision
+    scorer, so each row's own goal vector weights its own prediction —
+    environments with heterogeneous goals (different contention
+    regimes, Eq. 1) batch together correctly.  The ``pallas`` backend
+    scores the batch directly (``action_values`` is fully batched and
+    its goal einsum is already per-row), so the fused kernel sees the
+    real padded (width, dim) matmul instead of width vmapped
+    single-row calls.
     """
     sd, m, a = cfg.state_dim, cfg.n_measurements, cfg.n_actions
     states = packed[:, :sd]
     meas = packed[:, sd:sd + m]
     goals = packed[:, sd + m:sd + 2 * m]
     masks = packed[:, sd + 2 * m:sd + 2 * m + a] > 0.5
+
+    if cfg.backend == "pallas":
+        u = action_values(params, cfg, states, meas, goals)
+        return jnp.argmax(jnp.where(masks, u, -jnp.inf), axis=-1)
 
     def one(state, mrow, goal, mask):
         u = action_values(params, cfg, state[None], mrow[None], goal[None])[0]

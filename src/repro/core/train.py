@@ -45,6 +45,10 @@ class TrainConfig:
     grad_steps_per_round: int = 0    # extra train steps interleaved per
     #                                  lockstep round (0 = train only when
     #                                  an episode completes)
+    backend: Optional[str] = None    # None -> keep the agent's backend;
+    #                                  "xla" | "pallas" re-routes the agent
+    #                                  via set_backend (persists after the
+    #                                  run; fused-MLP Pallas kernel)
     verbose: bool = False
 
 
@@ -164,6 +168,8 @@ def train_agent_vectorized(agent: MRSchAgent, slots: Sequence[EnvSlot],
     batch stays wide.  Reports per-episode metrics plus decisions/sec.
     """
     log = TrainLog()
+    if config.backend is not None:
+        agent.set_backend(config.backend)
     lanes = [s for s in slots if s.jobsets]
     if not lanes:
         return log

@@ -1,4 +1,5 @@
-"""Pure-jnp oracle for the fused MLP kernel."""
+"""Pure-jnp oracle for the fused MLP kernel (forward and, via jax.grad,
+backward — the custom-VJP parity tests differentiate through this)."""
 from __future__ import annotations
 
 import jax.numpy as jnp
@@ -14,4 +15,6 @@ def fused_mlp_layer_ref(x, w, b, activation: str = "leaky_relu",
         y = jnp.maximum(y, 0.0)
     elif activation == "tanh":
         y = jnp.tanh(y)
+    elif activation != "linear":
+        raise ValueError(f"unknown activation {activation!r}")
     return y.astype(x.dtype)

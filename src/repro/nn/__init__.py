@@ -1,3 +1,4 @@
+from .backend import (BACKENDS, dense_forward, mlp_forward, resolve_backend)
 from .modules import (conv1d_apply, conv1d_init, count_params, dense_apply,
                       dense_init, glorot_init, he_init, leaky_relu, mlp_apply,
                       mlp_init)

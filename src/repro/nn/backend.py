@@ -1,0 +1,72 @@
+"""Pluggable execution backend for dense/MLP forwards.
+
+Two backends run the same ``{'layers': [{'w','b'}, ...]}`` param pytree
+(checkpoints are backend-agnostic — switching backends never touches
+the parameter layout):
+
+* ``"xla"``    — plain jnp ops (``dense_apply`` + activation), the
+                 reference path; bit-identical to the historical
+                 ``mlp_apply`` pipeline.
+* ``"pallas"`` — every layer runs through the fused matmul+bias+act
+                 Pallas kernel (``repro.kernels.fused_mlp``), forward
+                 AND backward (custom VJP with fused dgrad/wgrad), so
+                 jitted gradient bursts stay inside the kernel layer.
+                 Compiled on TPU, interpret-mode fallback elsewhere.
+
+Activations are named (strings), not callables, so the Pallas epilogue
+can fuse them; ``None`` means linear.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from ..kernels.fused_mlp.kernel import _apply_activation, _check_activation
+from ..kernels.fused_mlp.ops import fused_mlp
+from .modules import Params, dense_apply
+
+BACKENDS = ("xla", "pallas")
+
+
+def resolve_backend(backend: str) -> str:
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown nn backend {backend!r}; "
+                         f"expected one of {BACKENDS}")
+    return backend
+
+
+def _named_activation(y, activation: Optional[str], slope: float):
+    # Single dispatch table with the Pallas epilogue (kernel.py), so an
+    # activation added there is automatically available on both backends.
+    if activation is None:
+        return y
+    _check_activation(activation)
+    return _apply_activation(y, activation, slope)
+
+
+def dense_forward(layer: Params, x, activation: Optional[str] = None, *,
+                  slope: float = 0.2, backend: str = "xla",
+                  interpret: Optional[bool] = None):
+    """One dense layer + optional named activation on the given backend."""
+    if resolve_backend(backend) == "pallas":
+        return fused_mlp(x, layer["w"], layer["b"],
+                         activation=activation or "linear", slope=slope,
+                         interpret=interpret)
+    return _named_activation(dense_apply(layer, x), activation, slope)
+
+
+def mlp_forward(params: Params, x, hidden_activation: str = "leaky_relu",
+                final_activation: Optional[str] = None, *,
+                slope: float = 0.2, backend: str = "xla",
+                interpret: Optional[bool] = None):
+    """MLP forward with named activations, dispatched per backend.
+
+    ``backend="xla"`` reproduces ``mlp_apply`` (+ optional trailing
+    activation) exactly; ``backend="pallas"`` runs each layer through
+    the fused kernel.
+    """
+    n = len(params["layers"])
+    for i, layer in enumerate(params["layers"]):
+        act = hidden_activation if i < n - 1 else final_activation
+        x = dense_forward(layer, x, act, slope=slope, backend=backend,
+                          interpret=interpret)
+    return x

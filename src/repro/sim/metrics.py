@@ -26,12 +26,15 @@ class ScheduleMetrics:
     makespan: float
 
     def as_row(self) -> Dict[str, float]:
+        """Flat CSV/JSON row: every scalar field plus one util_<name>
+        column per resource (tests pin that no field is dropped)."""
         row = {f"util_{k}": v for k, v in self.utilization.items()}
         row.update(
             avg_wait=self.avg_wait,
             avg_slowdown=self.avg_slowdown,
             avg_bounded_slowdown=self.avg_bounded_slowdown,
             p95_wait=self.p95_wait,
+            max_wait=self.max_wait,
             n_jobs=self.n_jobs,
             makespan=self.makespan,
         )

@@ -49,6 +49,71 @@ def test_async_save(tmp_path):
     assert manifest["step"] == 10
 
 
+def test_async_save_failure_surfaces(tmp_path, monkeypatch):
+    """A failed background save must not vanish: wait() (and the next
+    save_async, which flushes first) re-raises the worker exception."""
+    from repro.checkpoint import store
+
+    m = CheckpointManager(str(tmp_path))
+
+    def boom(*a, **kw):
+        raise OSError("disk full")
+
+    monkeypatch.setattr(store, "save_pytree", boom)
+    m.save_async(tree(), 1)
+    with pytest.raises(OSError, match="disk full"):
+        m.wait()
+    monkeypatch.undo()
+    # the failure is reported once, then the manager is usable again
+    m.wait()
+    m.save_async(tree(), 2)
+    m.wait()
+    assert latest_step(str(tmp_path)) == 2
+
+
+def test_async_save_failure_surfaces_on_next_save(tmp_path, monkeypatch):
+    from repro.checkpoint import store
+
+    m = CheckpointManager(str(tmp_path))
+    monkeypatch.setattr(store, "save_pytree",
+                        lambda *a, **kw: (_ for _ in ()).throw(ValueError("bad dtype")))
+    m.save_async(tree(), 1)
+    m._thread.join()
+    monkeypatch.undo()
+    with pytest.raises(ValueError, match="bad dtype"):
+        m.save_async(tree(), 2)
+
+
+@pytest.mark.parametrize("dtype_name", ["bfloat16", "float8_e4m3fn",
+                                        "complex64"])
+def test_roundtrip_viewed_dtypes(tmp_path, dtype_name):
+    """The byte-view fallback must invert for 2-byte (bf16), 1-byte (fp8)
+    and wide (complex64) dtypes, with the manifest recording the logical
+    shape."""
+    import ml_dtypes
+
+    if dtype_name == "complex64":
+        dt = np.complex64
+        arr = (np.arange(6, dtype=np.float32).reshape(2, 3)
+               + 1j * np.ones((2, 3), np.float32)).astype(dt)
+        t = {"x": arr}
+    else:
+        dt = getattr(ml_dtypes, dtype_name)
+        t = {"x": np.linspace(-2, 2, 12, dtype=np.float32)
+             .reshape(3, 4).astype(dt)}
+    save_pytree(t, str(tmp_path), step=1)
+    with open(tmp_path / "step_00000001" / "manifest.json") as f:
+        manifest = json.load(f)
+    (leaf,) = manifest["leaves"]
+    assert leaf["shape"] == list(t["x"].shape)      # logical, not viewed
+    assert leaf["dtype"] == dtype_name
+    out, _ = restore_pytree(t, str(tmp_path))
+    restored = np.asarray(out["x"])
+    assert restored.dtype == np.dtype(dt)
+    np.testing.assert_array_equal(restored.view(np.uint8),
+                                  np.asarray(t["x"]).view(np.uint8))
+
+
 def test_shape_mismatch_rejected(tmp_path):
     save_pytree(tree(), str(tmp_path), 1)
     bad = tree()
@@ -93,6 +158,7 @@ ELASTIC = textwrap.dedent("""
 """)
 
 
+@pytest.mark.slow
 def test_elastic_restore_across_mesh_sizes(tmp_path):
     """Save on an 8-way mesh, restore onto a 4-way mesh (elastic restart).
     Runs in subprocesses because device count is fixed per process."""
@@ -107,6 +173,7 @@ def test_elastic_restore_across_mesh_sizes(tmp_path):
     assert "restored-ok" in p2.stdout, p2.stderr[-2000:]
 
 
+@pytest.mark.slow
 def test_train_loop_restart_resumes(tmp_path):
     """Kill-and-restart: a second train_loop picks up from the checkpoint
     and skips completed steps (fault-tolerant restart path)."""

@@ -7,6 +7,9 @@ import textwrap
 
 import pytest
 
+# Multi-device subprocess system tests — slow CI lane (`pytest -m slow`).
+pytestmark = pytest.mark.slow
+
 
 def run_sub(code: str, devices: int = 8, timeout: int = 600):
     prelude = (f"import os\n"

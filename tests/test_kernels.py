@@ -21,7 +21,7 @@ def tol(dtype):
 @pytest.mark.parametrize("m,k,n", [(1, 64, 32), (37, 300, 129),
                                    (128, 512, 256), (200, 1000, 513)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
-@pytest.mark.parametrize("act", ["leaky_relu", "relu", "tanh"])
+@pytest.mark.parametrize("act", ["leaky_relu", "relu", "tanh", "linear"])
 def test_fused_mlp_matches_ref(m, k, n, dtype, act):
     key = jax.random.PRNGKey(m * 7 + n)
     x = jax.random.normal(key, (m, k), dtype)
@@ -46,6 +46,80 @@ def test_fused_mlp_dfp_sizes():
     np.testing.assert_allclose(np.asarray(out, np.float32),
                                np.asarray(ref, np.float32), rtol=5e-2,
                                atol=5e-2)
+
+
+# ------------------------------------------------- fused_mlp custom VJP
+def _grads(f, x, w, b, n):
+    """d/d(x,w,b) of a fixed scalar projection of f's output."""
+    ct = jnp.sin(jnp.arange(n) * 0.37)
+    return jax.grad(lambda x, w, b: (f(x, w, b) * ct).sum(), (0, 1, 2))(
+        x, w, b)
+
+
+# Real DFP layer shapes: paper-scale state module rows (4000->1000->512)
+# and the packed decision batches the rollout engine actually emits —
+# including odd lane counts whose M is no multiple of any block.
+DFP_GRAD_SHAPES = [(1, 1000, 512), (3, 512, 128), (5, 4000, 1000),
+                   (37, 300, 129)]
+
+
+@pytest.mark.parametrize("m,k,n", DFP_GRAD_SHAPES)
+@pytest.mark.parametrize("act", ["leaky_relu", "relu", "tanh", "linear"])
+def test_fused_mlp_grad_matches_ref(m, k, n, act):
+    key = jax.random.PRNGKey(m * 31 + n)
+    x = jax.random.normal(key, (m, k))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (k, n)) * 0.05
+    b = jax.random.normal(jax.random.fold_in(key, 2), (n,)) * 0.1
+    gk = _grads(lambda x, w, b: fused_mlp(x, w, b, activation=act),
+                x, w, b, n)
+    gr = _grads(lambda x, w, b: fused_mlp_layer_ref(x, w, b, activation=act),
+                x, w, b, n)
+    for got, ref, name in zip(gk, gr, ("dx", "dw", "db")):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=1e-3, atol=1e-4, err_msg=name)
+
+
+def test_fused_mlp_grad_bf16():
+    """bf16 fwd+grad stays within bf16 resolution of the f32 oracle."""
+    key = jax.random.PRNGKey(7)
+    x = jax.random.normal(key, (5, 256), jnp.bfloat16)
+    w = (jax.random.normal(jax.random.fold_in(key, 1), (256, 128),
+                           jnp.float32) * 0.05).astype(jnp.bfloat16)
+    b = jnp.zeros((128,), jnp.bfloat16)
+    gk = _grads(lambda x, w, b: fused_mlp(x, w, b), x, w, b, 128)
+    xf, wf, bf = (t.astype(jnp.float32) for t in (x, w, b))
+    gr = _grads(lambda x, w, b: fused_mlp_layer_ref(x, w, b), xf, wf, bf, 128)
+    for got, ref in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(ref, np.float32),
+                                   rtol=5e-2, atol=5e-2)
+
+
+def test_fused_mlp_state_module_chain_grad():
+    """Grad parity through the whole fused state-module MLP chain."""
+    from repro.kernels.fused_mlp.ops import dfp_state_module
+    key = jax.random.PRNGKey(11)
+    sizes = [(300, 128), (128, 64)]
+    layers = [{"w": jax.random.normal(jax.random.fold_in(key, 2 * i),
+                                      (k, n)) * 0.05,
+               "b": jax.random.normal(jax.random.fold_in(key, 2 * i + 1),
+                                      (n,)) * 0.1}
+              for i, (k, n) in enumerate(sizes)]
+    x = jax.random.normal(key, (7, 300))
+
+    def ref_chain(x, layers):
+        h = x
+        for l in layers:
+            h = fused_mlp_layer_ref(h, l["w"], l["b"])
+        return h
+
+    gk = jax.grad(lambda x, ls: dfp_state_module(x, ls).sum(), (0, 1))(
+        x, layers)
+    gr = jax.grad(lambda x, ls: ref_chain(x, ls).sum(), (0, 1))(x, layers)
+    for got, ref in zip(jax.tree_util.tree_leaves(gk),
+                        jax.tree_util.tree_leaves(gr)):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=1e-3, atol=1e-4)
 
 
 # ------------------------------------------------------------- flash attn

@@ -7,6 +7,9 @@ import pytest
 from repro.configs import ARCH_NAMES, get_config, smoke_config
 from repro.models import decode_step, forward, init_cache, init_params, loss
 
+# Full-zoo forward/decode system sweeps — slow CI lane (`pytest -m slow`).
+pytestmark = pytest.mark.slow
+
 
 def _batch(cfg, B, S, key):
     if cfg.input_mode == "embeddings":

@@ -134,3 +134,23 @@ def test_metrics_utilization_bounds():
     assert r.metrics.utilization["bb"] == 0.0
     assert r.metrics.avg_wait == 0.0
     assert r.metrics.avg_slowdown == pytest.approx(1.0)
+
+
+def test_metrics_as_row_covers_every_field():
+    """Regression: ``as_row`` once silently dropped ``max_wait``, so every
+    sweep/bench CSV lost the tail-latency column.  Pin that each dataclass
+    field appears in the row (utilization expands to util_<name>)."""
+    import dataclasses
+
+    from repro.sim.metrics import ScheduleMetrics
+
+    m = ScheduleMetrics(utilization={"node": 0.5, "bb": 0.25}, avg_wait=1.0,
+                        avg_slowdown=2.0, avg_bounded_slowdown=1.5,
+                        p95_wait=7.0, max_wait=9.0, n_jobs=3, makespan=10.0)
+    row = m.as_row()
+    for f in dataclasses.fields(ScheduleMetrics):
+        if f.name == "utilization":
+            continue
+        assert row[f.name] == getattr(m, f.name), f.name
+    assert row["util_node"] == 0.5 and row["util_bb"] == 0.25
+    assert len(row) == len(dataclasses.fields(ScheduleMetrics)) - 1 + 2

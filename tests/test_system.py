@@ -12,6 +12,9 @@ from repro.core import AgentConfig, FCFSPolicy, MRSchAgent, evaluate, train_agen
 from repro.sim import run_trace
 from repro.workloads import ThetaConfig, build_scenarios, sampled_jobsets
 
+# Full training runs — exercised by the slow CI lane (`pytest -m slow`).
+pytestmark = pytest.mark.slow
+
 
 @pytest.fixture(scope="module")
 def setup():
