@@ -12,18 +12,34 @@ Standalone entry point (also the CI benchmark smoke)::
 times the scenario sweep sequentially AND through the batched
 ``VectorSimulator`` rollout engine and records the decision-throughput
 speedup in the result JSON.
+
+The registry-wide policy x scenario grid (the nightly CI signal)::
+
+    python -m benchmarks.bench_scheduling --matrix --smoke
+
+runs >=3 registry scenarios (incl. one §V-D drift workload) x >=3
+policies on the vector engine and writes the schema-stable
+``results/bench/matrix.json`` (+ ``.csv``).  ``--drift`` runs the §V-D
+adaptation experiment: a drifting trace split into phases, each policy
+walked through them via the lockstep refill hook, per-phase metrics in
+``results/bench/drift.json``.
 """
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 from repro.core import (AgentConfig, FCFSPolicy, GAConfig, GAOptimizer,
                         MRSchAgent, evaluate)
-from repro.workloads import build_curriculum, build_scenarios, build_sweep, run_sweep
+from repro.eval import (MatrixConfig, default_policies, eval_factory,
+                        run_matrix, save_matrix)
+from repro.workloads import (build_curriculum, build_jobs, build_scenarios,
+                             build_sweep, get_scenario, run_phases, run_sweep,
+                             segment_jobs)
 
-from .common import (Timer, kiviat_scores, metric_row, mini_setup, save_json,
-                     train_mrsch, train_scalar_rl)
+from .common import (RESULTS, Timer, kiviat_scores, metric_row, mini_setup,
+                     save_json, train_mrsch, train_scalar_rl)
 
 
 def sweep_throughput(agent, res, cfg, scenarios, seeds, vector: int,
@@ -69,8 +85,7 @@ def run_smoke(vector: int = 4, trials: int = 3, seed: int = 0):
     equivalence are properties of the rollout engine, not of the weights.
     """
     cfg, res = mini_setup(seed=seed, duration_days=0.75, jobs_per_day=160)
-    agent = MRSchAgent(res, AgentConfig(
-        state_hidden=(256, 64), state_out=32, module_hidden=16, seed=seed))
+    agent = _matrix_agent(res, seed)       # same CI agent the matrix gates
     out = {
         "config": "mini(256 nodes, 80 bb units), 0.75 days, untrained agent",
         **sweep_throughput(agent, res, cfg, scenarios=("S1", "S2", "S3", "S4"),
@@ -78,6 +93,92 @@ def run_smoke(vector: int = 4, trials: int = 3, seed: int = 0):
     }
     save_json("scheduling_sweep", out)
     return out
+
+
+SMOKE_MATRIX = ("S2", "bursty-campaigns", "drift-bb-surge")
+FULL_MATRIX = ("S1", "S2", "S3", "S4", "S5", "theta-base", "diurnal-heavy",
+               "bursty-campaigns", "size-skew-small", "size-skew-large",
+               "drift-bb-surge", "drift-arrival-ramp", "drift-node-shift")
+
+
+def _matrix_agent(res, seed: int = 0) -> MRSchAgent:
+    return MRSchAgent(res, AgentConfig(
+        state_hidden=(256, 64), state_out=32, module_hidden=16, seed=seed))
+
+
+def run_matrix_bench(smoke: bool = True, vector: int = 4, seed: int = 0,
+                     agent: MRSchAgent | None = None):
+    """Policy x scenario grid on the vector engine -> matrix.json/.csv.
+
+    Smoke sizing (the CI lane): 3 registry scenarios — one per family
+    class, including a §V-D drift workload — x 4 policies, untrained
+    agents (grid mechanics and schema don't depend on the weights).
+    """
+    days, jobs_day = (0.6, 120) if smoke else (2.0, 220)
+    cfg, res = mini_setup(seed=seed, duration_days=days, jobs_per_day=jobs_day)
+    policies = default_policies(res, agent=agent or _matrix_agent(res, seed))
+    mcfg = MatrixConfig(scenarios=SMOKE_MATRIX if smoke else FULL_MATRIX,
+                        seeds=(1,) if smoke else (1, 2), vector=vector)
+    matrix = run_matrix(policies, res, cfg, mcfg)
+    json_path, csv_path = save_matrix(
+        matrix, os.path.join(RESULTS, "matrix.json"))
+    matrix["paths"] = {"json": json_path, "csv": csv_path}
+    return matrix
+
+
+def summarize_matrix(matrix) -> str:
+    s = matrix["summary"]
+    cfgm = matrix["config"]
+    n_drift = len({r["scenario"] for r in matrix["rows"] if r["drift"]})
+    return (f"matrix[{matrix['schema']}]: {len(cfgm['scenarios'])} scenarios "
+            f"({n_drift} drift) x {len(cfgm['policies'])} policies x "
+            f"{len(cfgm['seeds'])} seeds = {s['n_cells']} cells in "
+            f"{s['wall_seconds']:.1f}s; wins={s['wins']} "
+            f"-> {matrix.get('paths', {}).get('json', 'results/bench/matrix.json')}")
+
+
+def run_drift_bench(smoke: bool = True, scenario: str = "drift-bb-surge",
+                    n_phases: int = 2, seed: int = 0):
+    """§V-D adaptation: per-phase metrics across a mid-trace shift.
+
+    The drifted trace is cut at the schedule boundaries into phases; each
+    policy walks them via the lockstep ``refill`` hook so the per-phase
+    rows show how (or whether) it re-prioritizes after the shift.
+    """
+    days = 1.0 if smoke else 4.0
+    cfg, res = mini_setup(seed=seed, duration_days=days, jobs_per_day=160)
+    jobs = build_jobs(scenario, cfg, seed=1)
+    phases = segment_jobs(jobs, n_phases)
+    policies = default_policies(res, agent=_matrix_agent(res, seed))
+    out = {"scenario": scenario,
+           "description": get_scenario(scenario).description,
+           "n_phases": n_phases, "policies": {}}
+    for name, factory in policies.items():
+        pol = factory()
+        if hasattr(pol, "select_batch"):
+            was = getattr(pol, "training", None)
+            if was:
+                pol.training = False
+            results = run_phases(pol, res, [phases])
+            if was:
+                pol.training = was
+        else:                      # GA-style: own frozen instance per lane
+            results = run_phases(None, res, [phases],
+                                 policy_factory=eval_factory(factory))
+        out["policies"][name] = [
+            {"phase": pr.phase, **metric_row(name, pr.result)}
+            for pr in sorted(results, key=lambda p: p.phase)]
+    save_json("drift", out)
+    return out
+
+
+def summarize_drift(out) -> str:
+    lines = [f"drift[{out['scenario']}] {out['n_phases']} phases:"]
+    for name, rows in out["policies"].items():
+        utils = " -> ".join(f"bb={r['util_bb']:.3f}/wait={r['avg_wait']:.0f}s"
+                            for r in rows)
+        lines.append(f"  {name}: {utils}")
+    return "\n".join(lines)
 
 
 def run(quick: bool = True, scenarios=("S1", "S2", "S3", "S4", "S5"),
@@ -162,11 +263,22 @@ if __name__ == "__main__":
     ap.add_argument("--vector", type=int, default=0,
                     help="also time the sweep with N lockstep environments")
     ap.add_argument("--smoke", action="store_true",
-                    help="CI smoke: tiny sweep benchmark only, no training")
+                    help="CI smoke: tiny sizing, no training")
+    ap.add_argument("--matrix", action="store_true",
+                    help="policy x scenario registry grid "
+                         "-> results/bench/matrix.json/.csv")
+    ap.add_argument("--drift", action="store_true",
+                    help="§V-D adaptation: per-phase metrics across a "
+                         "mid-trace workload shift -> results/bench/drift.json")
     args = ap.parse_args()
     if args.vector < 0:
         ap.error(f"--vector must be >= 0, got {args.vector}")
-    if args.smoke:
+    if args.matrix:
+        print(summarize_matrix(run_matrix_bench(smoke=args.smoke,
+                                                vector=args.vector or 4)))
+    elif args.drift:
+        print(summarize_drift(run_drift_bench(smoke=args.smoke)))
+    elif args.smoke:
         print(summarize_sweep(run_smoke(vector=args.vector or 4)))
     else:
         print(summarize(run(quick=not args.full, vector=args.vector)))

@@ -6,11 +6,11 @@ import os
 import time
 from typing import Dict, List, Sequence
 
-import numpy as np
-
 from repro.core import (AgentConfig, FCFSPolicy, GAConfig, GAOptimizer,
                         MRSchAgent, ScalarRLConfig, ScalarRLPolicy, evaluate,
                         train_agent)
+# One scorer for the per-figure benches and the eval-matrix wins summary.
+from repro.eval.matrix import kiviat_scores  # noqa: F401  (re-export)
 from repro.workloads import ThetaConfig, build_curriculum, build_scenarios, generate_trace
 
 RESULTS = os.environ.get("REPRO_BENCH_RESULTS", "results/bench")
@@ -59,20 +59,6 @@ def metric_row(name: str, result) -> Dict[str, float]:
     return {"method": name, **{k: round(v, 4) for k, v in row.items()}}
 
 
-def kiviat_scores(rows: List[Dict]) -> Dict[str, float]:
-    """Normalized overall score (Fig. 7 area proxy): mean over
-    [util_node, util_bb(, util_power), 1/wait, 1/slowdown], each scaled so
-    the best method = 1."""
-    axes = [k for k in rows[0] if k.startswith("util_")]
-    vals = {}
-    for r in rows:
-        v = [r[a] for a in axes]
-        v.append(1.0 / max(r["avg_wait"], 1e-9))
-        v.append(1.0 / max(r["avg_slowdown"], 1e-9))
-        vals[r["method"]] = np.array(v)
-    stack = np.stack(list(vals.values()))
-    best = stack.max(axis=0) + 1e-12
-    return {m: float((v / best).mean()) for m, v in vals.items()}
 
 
 def save_json(name: str, obj) -> str:

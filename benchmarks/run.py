@@ -2,6 +2,11 @@
 
 Prints ``name,us_per_call,derived`` CSV rows.  ``--full`` scales up the
 trace sizes; default sizing finishes on a single CPU core.
+
+Exit code contract (the CI lanes depend on it): any selected bench that
+raises — including a failure while deriving its summary cell — produces
+an ``ERROR:`` row and a non-zero exit; ``--only`` with a name that
+matches no bench is an argument error, never a silent empty run.
 """
 from __future__ import annotations
 
@@ -22,7 +27,82 @@ def _run(name, fn, **kw):
         return name, time.time() - t0, None, f"{type(e).__name__}: {e}"
 
 
-def main() -> None:
+def _derived(name, out) -> str:
+    if name == "overhead_vF":
+        return (f"decision={out['decision_latency_s'] * 1e3:.1f}ms;"
+                f"bar2s={'PASS' if out['meets_paper_bar'] else 'FAIL'}")
+    if name == "roofline_g":
+        s = out["summary"]
+        return (f"cells_ok={s['baseline_cells_ok']};"
+                f"skipped={s['baseline_cells_skipped']}")
+    if name == "scheduling_fig5_6_7":
+        ks = {n: d["kiviat"] for n, d in out["scenarios"].items()}
+        wins = sum(1 for k in ks.values() if max(k, key=k.get) == "MRSch")
+        derived = f"MRSch_best_in={wins}/{len(ks)}"
+        if "vector_sweep" in out:
+            sw = out["vector_sweep"]
+            derived += (f";sweep_speedup_N{sw['n_envs']}="
+                        f"{sw['decision_throughput_speedup']:.2f}x")
+        return derived
+    if name == "eval_matrix":
+        s = out["summary"]
+        return (f"cells={s['n_cells']};wins="
+                + "/".join(f"{k}:{v}" for k, v in s["wins"].items()))
+    if name == "state_module_fig3":
+        if "kiviat" in out:
+            k = out["kiviat"]
+            return f"MLP={k.get('MLP', 0):.3f};CNN={k.get('CNN', 0):.3f}"
+        s = out["shapes"][-1]       # --backend microbench variant
+        return (f"backend={out['backend']};fwd_speedup="
+                f"{s.get('fwd_speedup_vs_xla', 1.0)}x")
+    if name == "curriculum_fig4":
+        fl = {k: v["final_loss"] for k, v in out.items()
+              if k != "vector_training"}
+        best = min((v, k) for k, v in fl.items() if v is not None)[1]
+        derived = f"best_order={best}"
+        vt = out.get("vector_training")
+        if vt:
+            derived += (f";train_speedup_N{vt['n_envs']}="
+                        f"{vt['speedup']:.2f}x")
+        return derived
+    if name == "goal_adaptation_fig8_9":
+        return (f"rBB_S1={out['S1']['mean']:.3f};"
+                f"rBB_S5={out['S5']['mean']:.3f}")
+    if name == "three_resource_fig10":
+        wins = sum(1 for d in out.values()
+                   if max(d["kiviat"], key=d["kiviat"].get) == "MRSch")
+        return f"MRSch_best_in={wins}/{len(out)}"
+    return ""
+
+
+def run_benches(benches) -> int:
+    """Run every bench, print CSV rows, return the failure count.
+
+    A failure is a bench body raising OR its derived-summary cell
+    raising (a bench whose output lost a contract key is as broken as
+    one that crashed) — both print an ``ERROR:`` row and count.
+    """
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in benches.items():
+        bname, dt, out, err = _run(name, fn)
+        if err is None:
+            try:
+                derived = _derived(name, out)
+            except Exception as e:
+                traceback.print_exc()
+                err = f"derived: {type(e).__name__}: {e}"
+        if err:
+            failures += 1
+            print(f"{bname},{dt * 1e6:.0f},ERROR:{err}", flush=True)
+            continue
+        print(f"{bname},{dt * 1e6:.0f},{derived}", flush=True)
+    if failures:
+        print(f"{failures}/{len(benches)} benches failed", file=sys.stderr)
+    return failures
+
+
+def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
@@ -33,7 +113,7 @@ def main() -> None:
     ap.add_argument("--backend", default=None, choices=("xla", "pallas"),
                     help="NN backend for the state-module/curriculum "
                          "benches (None = xla + Fig. 3 ablation)")
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
     quick = not args.full
 
     from . import (bench_curriculum, bench_goal_adaptation, bench_overhead,
@@ -49,66 +129,21 @@ def main() -> None:
             quick=quick, backend=args.backend),
         "scheduling_fig5_6_7": lambda: bench_scheduling.run(
             quick=quick, vector=args.vector),
+        "eval_matrix": lambda: bench_scheduling.run_matrix_bench(
+            smoke=quick, vector=args.vector or 4),
         "goal_adaptation_fig8_9": lambda: bench_goal_adaptation.run(quick=quick),
         "three_resource_fig10": lambda: bench_three_resource.run(quick=quick),
     }
     if args.only:
         keep = set(args.only.split(","))
+        unknown = keep - set(benches)
+        if unknown:
+            ap.error(f"unknown bench name(s) {sorted(unknown)}; "
+                     f"available: {', '.join(benches)}")
         benches = {k: v for k, v in benches.items() if k in keep}
 
-    print("name,us_per_call,derived")
-    failures = 0
-    for name, fn in benches.items():
-        bname, dt, out, err = _run(name, fn)
-        if err:
-            failures += 1
-            print(f"{bname},{dt * 1e6:.0f},ERROR:{err}")
-            continue
-        derived = ""
-        if name == "overhead_vF":
-            derived = (f"decision={out['decision_latency_s'] * 1e3:.1f}ms;"
-                       f"bar2s={'PASS' if out['meets_paper_bar'] else 'FAIL'}")
-        elif name == "roofline_g":
-            s = out["summary"]
-            derived = (f"cells_ok={s['baseline_cells_ok']};"
-                       f"skipped={s['baseline_cells_skipped']}")
-        elif name == "scheduling_fig5_6_7":
-            ks = {n: d["kiviat"] for n, d in out["scenarios"].items()}
-            wins = sum(1 for k in ks.values()
-                       if max(k, key=k.get) == "MRSch")
-            derived = f"MRSch_best_in={wins}/{len(ks)}"
-            if "vector_sweep" in out:
-                sw = out["vector_sweep"]
-                derived += (f";sweep_speedup_N{sw['n_envs']}="
-                            f"{sw['decision_throughput_speedup']:.2f}x")
-        elif name == "state_module_fig3":
-            if "kiviat" in out:
-                k = out["kiviat"]
-                derived = f"MLP={k.get('MLP', 0):.3f};CNN={k.get('CNN', 0):.3f}"
-            else:           # --backend microbench variant
-                s = out["shapes"][-1]
-                derived = (f"backend={out['backend']};fwd_speedup="
-                           f"{s.get('fwd_speedup_vs_xla', 1.0)}x")
-        elif name == "curriculum_fig4":
-            fl = {k: v["final_loss"] for k, v in out.items()
-                  if k != "vector_training"}
-            best = min((v, k) for k, v in fl.items() if v is not None)[1]
-            derived = f"best_order={best}"
-            vt = out.get("vector_training")
-            if vt:
-                derived += (f";train_speedup_N{vt['n_envs']}="
-                            f"{vt['speedup']:.2f}x")
-        elif name == "goal_adaptation_fig8_9":
-            derived = (f"rBB_S1={out['S1']['mean']:.3f};"
-                       f"rBB_S5={out['S5']['mean']:.3f}")
-        elif name == "three_resource_fig10":
-            wins = sum(1 for d in out.values()
-                       if max(d["kiviat"], key=d["kiviat"].get) == "MRSch")
-            derived = f"MRSch_best_in={wins}/{len(out)}"
-        print(f"{bname},{dt * 1e6:.0f},{derived}", flush=True)
-    if failures:
-        sys.exit(1)
+    return 1 if run_benches(benches) else 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -35,6 +35,10 @@ class FCFSPolicy:
     def select(self, ctx: SchedContext) -> int:
         return 0
 
+    def select_batch(self, ctxs: Sequence[SchedContext]) -> np.ndarray:
+        """Batched adapter for ``VectorSimulator`` (always the head)."""
+        return np.zeros(len(ctxs), dtype=np.int32)
+
 
 # --------------------------------------------------------------------- GA
 @dataclass(frozen=True)
@@ -56,6 +60,12 @@ class GAOptimizer:
     optimization literature).  Non-dominated sorting + crowding distance
     pick the survivor; the winning permutation is then replayed one
     selection at a time.
+
+    Deliberately no ``select_batch``: the cached plan is keyed to ONE
+    trace's clock and window, so sharing an instance across lockstep
+    environments would cross-contaminate plans.  The vector engine runs
+    GA through its sequential per-environment fallback with one instance
+    per environment (``VectorSimulator.from_factory``).
     """
 
     def __init__(self, config: GAConfig = GAConfig()):
@@ -225,6 +235,27 @@ class ScalarRLPolicy:
         else:
             action = int(np.argmax(logits))
         return action
+
+    def select_batch(self, ctxs: Sequence[SchedContext]) -> np.ndarray:
+        """Greedy actions for N contexts with one batched forward.
+
+        Evaluation-only adapter for ``VectorSimulator`` (the evaluation
+        matrix fans ScalarRL over the lockstep engine with it).  Training
+        stays on the sequential ``select`` path: the REINFORCE episode
+        buffers assume one contiguous trajectory.
+        """
+        if self.training:
+            raise RuntimeError(
+                "ScalarRLPolicy.select_batch is evaluation-only: training "
+                "accumulates a single contiguous episode — run training "
+                "through Simulator.run per trace")
+        states = np.stack([encode_state(self.enc, c) for c in ctxs])
+        mask = np.zeros((len(ctxs), self.config.window), bool)
+        for i, c in enumerate(ctxs):
+            mask[i, :min(len(c.window), self.config.window)] = True
+        logits = np.array(mlp_apply(self.params, jnp.asarray(states)))
+        logits[~mask] = -1e9
+        return np.argmax(logits, axis=1).astype(np.int32)
 
     def end_episode(self) -> Optional[float]:
         if not self.training or len(self._actions) < 2:

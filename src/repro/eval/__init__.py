@@ -1,0 +1,10 @@
+"""Evaluation harnesses pitting MRSch against its baselines at scale."""
+from .matrix import (MATRIX_SCHEMA, MatrixConfig, default_policies,
+                     eval_factory, kiviat_scores, matrix_columns, matrix_csv, run_matrix,
+                     save_matrix)
+
+__all__ = [
+    "MATRIX_SCHEMA", "MatrixConfig", "default_policies", "eval_factory",
+    "kiviat_scores",
+    "matrix_columns", "matrix_csv", "run_matrix", "save_matrix",
+]

@@ -94,6 +94,24 @@ class VectorSimulator:
         sims = [Simulator(resources, jobs, policy, config) for jobs in jobsets]
         return cls(sims, policy=policy)
 
+    @classmethod
+    def from_factory(cls, resources: Sequence[ResourceSpec],
+                     jobsets: Sequence[Sequence[Job]],
+                     policy_factory: Callable[[], object],
+                     config: SimConfig | None = None) -> "VectorSimulator":
+        """One FRESH policy instance per environment, lockstep preserved.
+
+        For stateful sequential policies (``GAOptimizer``'s cached plan,
+        learning baselines) that must not share state across lanes: each
+        environment answers its own contexts through its own instance via
+        the engine's sequential fallback.  Nothing batches, but the
+        round interleaving — and therefore any refill/on_round driving —
+        matches the batched policies, so matrix cells stay comparable.
+        """
+        sims = [Simulator(resources, jobs, policy_factory(), config)
+                for jobs in jobsets]
+        return cls(sims, policy=None)
+
     # ---------------------------------------------------------------- run
     def _advance(self, i: int,
                  refill: Optional[Callable[[int, SimResult],

@@ -1,0 +1,264 @@
+"""Named, parameterized scenario registry (ROADMAP: "as many scenarios
+as you can imagine").
+
+One lookup point for every workload the repo can replay, so sweeps,
+benches, the evaluation matrix (``repro.eval.matrix``) and CI all speak
+the same scenario names:
+
+* the paper's S1–S10 contention/power families (Table III, §V-E),
+* the raw Theta-like base trace,
+* real-trace replay via SWF files (:func:`register_swf`),
+* new synthetic families — pronounced diurnal cycles, bursty campaign
+  submissions, size-skewed mixes,
+* drifting workloads (§V-D) whose distribution shifts mid-trace via
+  ``drift.DriftSchedule`` transformers.
+
+Every scenario builds deterministically from ``(ThetaConfig, seed)``; the
+registry is import-time populated and extensible at runtime via
+:func:`register` (plugins, tests, SWF drop-ins).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..sim.job import Job
+from .drift import DriftPhase, DriftSchedule, apply_drift, step_schedule
+from .scenarios import SCENARIOS as _PAPER_SCENARIOS
+from .scenarios import build_scenarios, with_power
+from .theta import ThetaConfig, generate_trace, jobs_from_swf
+
+Builder = Callable[..., List[Job]]     # (cfg, seed, **params) -> jobs
+
+
+@dataclass(frozen=True)
+class ScenarioSpec:
+    """A named, parameterized workload family.
+
+    ``build(cfg, seed, **params)`` produces the trace; ``drift`` (when
+    set) is applied afterwards with a seed derived from ``seed``; then
+    ``power`` attaches §V-E power profiles.  ``tags`` support filtered
+    selection (e.g. every "drift" scenario for the adaptation bench).
+    """
+    name: str
+    description: str
+    build: Builder
+    family: str = "synthetic"          # paper | base | synthetic | drift | swf
+    params: Dict[str, object] = field(default_factory=dict)
+    drift: Optional[DriftSchedule] = None
+    power: bool = False
+    tags: Tuple[str, ...] = ()
+
+
+_REGISTRY: Dict[str, ScenarioSpec] = {}
+
+
+def register(spec: ScenarioSpec, overwrite: bool = False) -> ScenarioSpec:
+    if not overwrite and spec.name in _REGISTRY:
+        raise ValueError(f"scenario {spec.name!r} already registered")
+    _REGISTRY[spec.name] = spec
+    return spec
+
+
+def get_scenario(name: str) -> ScenarioSpec:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        known = ", ".join(sorted(_REGISTRY))
+        raise KeyError(f"unknown scenario {name!r}; registered: {known}") \
+            from None
+
+
+def scenario_names(family: Optional[str] = None,
+                   tag: Optional[str] = None) -> List[str]:
+    """Registered names, optionally filtered by family and/or tag."""
+    out = []
+    for name, spec in sorted(_REGISTRY.items()):
+        if family is not None and spec.family != family:
+            continue
+        if tag is not None and tag not in spec.tags:
+            continue
+        out.append(name)
+    return out
+
+
+def build_jobs(name: str, cfg: ThetaConfig, seed: int = 1,
+               **overrides) -> List[Job]:
+    """Materialize one scenario's trace, deterministically for a seed."""
+    spec = get_scenario(name)
+    params = {**spec.params, **overrides}
+    jobs = spec.build(cfg, seed, **params)
+    if spec.drift is not None:
+        jobs = apply_drift(jobs, spec.drift, cfg, seed=seed + 101)
+    if spec.power:
+        jobs = with_power(jobs, cfg, seed=seed + 7)
+    return jobs
+
+
+def build_many(names: Sequence[str], cfg: ThetaConfig,
+               seed: int = 1) -> Dict[str, List[Job]]:
+    return {n: build_jobs(n, cfg, seed=seed) for n in names}
+
+
+# ------------------------------------------------------------------ builders
+def _reseeded(cfg: ThetaConfig, seed: int) -> ThetaConfig:
+    """Per-(scenario, seed) trace variant of the base config."""
+    return replace(cfg, seed=cfg.seed + 7919 * seed)
+
+
+def _paper(cfg: ThetaConfig, seed: int, scenario: str = "S1") -> List[Job]:
+    return build_scenarios(cfg, names=(scenario,), seed=seed)[scenario]
+
+
+def _theta_base(cfg: ThetaConfig, seed: int) -> List[Job]:
+    return generate_trace(_reseeded(cfg, seed))
+
+
+def _diurnal(cfg: ThetaConfig, seed: int, amplitude: float = 0.95,
+             weekend_factor: float = 0.35) -> List[Job]:
+    """Pronounced day/night + weekend arrival cycles (queue breathes)."""
+    return generate_trace(replace(_reseeded(cfg, seed),
+                                  diurnal_amplitude=amplitude,
+                                  weekend_factor=weekend_factor))
+
+
+def _bursty(cfg: ThetaConfig, seed: int, campaign_mean: float = 8.0,
+            within_gap_s: float = 120.0) -> List[Job]:
+    """Campaign submissions: jobs arrive in tight bursts with long gaps.
+
+    Re-times the base trace's jobs: arrivals are regrouped into campaigns
+    of geometric size (mean ``campaign_mean``), ~``within_gap_s`` apart
+    inside a campaign, with the inter-campaign gaps stretched so the
+    total span is preserved (same load, very different queue dynamics).
+    """
+    jobs = sorted(generate_trace(_reseeded(cfg, seed)),
+                  key=lambda j: (j.submit, j.jid))
+    if len(jobs) < 2:
+        return jobs
+    rng = np.random.default_rng(1000 + seed)
+    span = jobs[-1].submit - jobs[0].submit
+    sizes: List[int] = []
+    while sum(sizes) < len(jobs):
+        sizes.append(1 + rng.geometric(1.0 / campaign_mean))
+    n_campaigns = len(sizes)
+    in_burst = sum(min(s, len(jobs)) for s in sizes) * within_gap_s
+    gap_mean = max((span - in_burst) / max(n_campaigns, 1), within_gap_s)
+    out, t, k = [], jobs[0].submit, 0
+    for s in sizes:
+        for _ in range(s):
+            if k >= len(jobs):
+                break
+            nj = jobs[k].copy()
+            nj.submit = t
+            out.append(nj)
+            t += rng.exponential(within_gap_s)
+            k += 1
+        t += rng.exponential(gap_mean)
+    return out
+
+
+_SKEW_SMALL = (0.30, 0.24, 0.18, 0.12, 0.07, 0.04, 0.03, 0.01, 0.007, 0.003)
+_SKEW_LARGE = (0.02, 0.03, 0.04, 0.05, 0.08, 0.12, 0.18, 0.22, 0.16, 0.10)
+
+
+def _size_skew(cfg: ThetaConfig, seed: int,
+               weights: Sequence[float] = _SKEW_SMALL) -> List[Job]:
+    return generate_trace(replace(_reseeded(cfg, seed),
+                                  size_weights=tuple(weights)))
+
+
+def _drifted_paper(cfg: ThetaConfig, seed: int,
+                   scenario: str = "S2") -> List[Job]:
+    """Base jobs for drift scenarios: a paper family pre-drift."""
+    return _paper(cfg, seed, scenario=scenario)
+
+
+def register_swf(name: str, path: str, description: str = "",
+                 overwrite: bool = False) -> ScenarioSpec:
+    """Register a real-trace replay scenario backed by an SWF file.
+
+    The seed is ignored (a real trace has one realization); ``n_nodes``
+    clamps per-job demands to the configured cluster.
+    """
+    def _build(cfg: ThetaConfig, seed: int, **_params) -> List[Job]:
+        return jobs_from_swf(path, n_nodes=cfg.n_nodes)
+
+    return register(ScenarioSpec(
+        name=name, family="swf", build=_build,
+        description=description or f"SWF replay of {path}",
+        tags=("swf", "replay")), overwrite=overwrite)
+
+
+# ------------------------------------------------------------------ defaults
+def _register_defaults() -> None:
+    for s, (frac, lo_tb, halve) in _PAPER_SCENARIOS.items():
+        register(ScenarioSpec(
+            name=s, family="paper", build=_paper, params={"scenario": s},
+            description=(f"Table III {s}: {frac:.0%} of jobs request BB in "
+                         f"[{lo_tb:g}, 285] TB" + (", node demand halved"
+                                                   if halve else "")),
+            tags=("paper", "table3")))
+        s_pow = f"S{int(s[1:]) + 5}"
+        register(ScenarioSpec(
+            name=s_pow, family="paper", build=_paper,
+            params={"scenario": s_pow},
+            description=f"§V-E {s_pow}: {s} plus 100–215 W/node power "
+                        "profile under the scaled 500 kW budget",
+            tags=("paper", "three-resource", "power")))
+    register(ScenarioSpec(
+        name="theta-base", family="base", build=_theta_base,
+        description="Raw Theta-like synthetic trace (Darshan-style BB mix)",
+        tags=("base",)))
+    register(ScenarioSpec(
+        name="diurnal-heavy", family="synthetic", build=_diurnal,
+        description="Pronounced diurnal/weekend arrival cycles "
+                    "(amplitude 0.95, weekends at 35%)",
+        tags=("synthetic", "arrival")))
+    register(ScenarioSpec(
+        name="bursty-campaigns", family="synthetic", build=_bursty,
+        description="Campaign submissions: geometric bursts (~8 jobs, "
+                    "~2 min spacing) separated by long idle gaps",
+        tags=("synthetic", "arrival")))
+    register(ScenarioSpec(
+        name="size-skew-small", family="synthetic", build=_size_skew,
+        params={"weights": _SKEW_SMALL},
+        description="Job-size mix skewed toward small jobs "
+                    "(capacity fragmentation regime)",
+        tags=("synthetic", "size")))
+    register(ScenarioSpec(
+        name="size-skew-large", family="synthetic", build=_size_skew,
+        params={"weights": _SKEW_LARGE},
+        description="Job-size mix skewed toward capability-class jobs "
+                    "(blocking/backfill regime)",
+        tags=("synthetic", "size")))
+    register(ScenarioSpec(
+        name="drift-bb-surge", family="drift", build=_drifted_paper,
+        params={"scenario": "S1"},
+        drift=step_schedule(at=0.5, bb_fraction=0.85, bb_scale=1.25),
+        description="§V-D shift: S1 trace whose BB demand surges at "
+                    "mid-trace (85% of jobs request BB, sizes +25%)",
+        tags=("drift", "bb")))
+    register(ScenarioSpec(
+        name="drift-arrival-ramp", family="drift", build=_drifted_paper,
+        params={"scenario": "S2"},
+        drift=DriftSchedule(mode="ramp", phases=(
+            DriftPhase(start=0.0),
+            DriftPhase(start=1.0, rate_scale=2.5))),
+        description="§V-D shift: S2 trace whose arrival rate ramps to "
+                    "2.5x over the trace span",
+        tags=("drift", "arrival")))
+    register(ScenarioSpec(
+        name="drift-node-shift", family="drift", build=_drifted_paper,
+        params={"scenario": "S3"},
+        drift=DriftSchedule(phases=(
+            DriftPhase(start=0.0),
+            DriftPhase(start=0.4, node_scale=1.6, bb_fraction=0.2),
+            DriftPhase(start=0.8, node_scale=0.7, bb_fraction=0.8))),
+        description="§V-D shift: S3 trace flipping from CPU-heavy "
+                    "(nodes x1.6, BB 20%) to BB-heavy (nodes x0.7, BB 80%)",
+        tags=("drift", "node", "bb")))
+
+
+_register_defaults()

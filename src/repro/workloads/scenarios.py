@@ -41,28 +41,35 @@ def _bb_pool_tb(cfg: ThetaConfig, rng: np.random.Generator, lo: float) -> np.nda
     return raw
 
 
+def bb_pool_units(cfg: ThetaConfig, rng: np.random.Generator,
+                  lo_tb: float = 5.0) -> np.ndarray:
+    """Heavy-tailed BB request pool in cluster *units*, clamped to capacity.
+
+    The single source of the scenario-style request distribution: the TB
+    range scales with the cluster so mini systems see the same
+    *fractional* contention the paper's full system does.  Shared by the
+    Table III derivations here and the §V-D drift transformers
+    (``drift.apply_drift``) so drifted traces stay in family.
+    """
+    scale = cfg.bb_units / THETA_BB_UNITS
+    unit_tb = 1.26e3 / THETA_BB_UNITS
+    tb = _bb_pool_tb(cfg, rng, lo_tb) * scale
+    return np.minimum(np.ceil(tb / unit_tb), cfg.bb_units).astype(int)
+
+
 def derive_scenario(base: List[Job], cfg: ThetaConfig, name: str,
                     seed: int = 1) -> List[Job]:
     frac, lo_tb, halve = SCENARIOS[name]
     # stable per-scenario offset (NOT hash(): str hashing is salted per
     # process, which made benchmark runs non-reproducible across invocations)
     rng = np.random.default_rng(seed + sum(ord(c) for c in name))
-    unit_tb = 1.26e3 / cfg.bb_units * (cfg.bb_units / THETA_BB_UNITS) \
-        if cfg.bb_units != THETA_BB_UNITS else 1.26e3 / THETA_BB_UNITS
-    # Scale the TB range with the cluster so mini systems see the same
-    # *fractional* contention the paper's full system does.
-    scale = cfg.bb_units / THETA_BB_UNITS
-    pool = _bb_pool_tb(cfg, rng, lo_tb) * scale
+    pool = bb_pool_units(cfg, rng, lo_tb)
     jobs = []
     for j in base:
         nj = j.copy()
         if halve:
             nj.demands["node"] = max(1, nj.demands["node"] // 2)
-        if rng.uniform() < frac:
-            tb = float(rng.choice(pool))
-            nj.demands["bb"] = min(int(math.ceil(tb / unit_tb)), cfg.bb_units)
-        else:
-            nj.demands["bb"] = 0
+        nj.demands["bb"] = int(rng.choice(pool)) if rng.uniform() < frac else 0
         jobs.append(nj)
     return jobs
 

@@ -1,0 +1,185 @@
+"""Evaluation-matrix schema stability + the bench regression gate."""
+import importlib.util
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.eval import (MATRIX_SCHEMA, MatrixConfig, default_policies,
+                        matrix_columns, matrix_csv, run_matrix, save_matrix)
+from repro.workloads import ThetaConfig
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def _load(name, rel):
+    spec = importlib.util.spec_from_file_location(name, REPO / rel)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+check_bench = _load("check_bench", "tools/check_bench.py")
+
+
+@pytest.fixture(scope="module")
+def mini():
+    cfg = ThetaConfig.mini(seed=0, duration_days=0.4, jobs_per_day=110)
+    return cfg, cfg.resources()
+
+
+@pytest.fixture(scope="module")
+def matrix(mini):
+    cfg, res = mini
+    pols = default_policies(res)        # FCFS + GA + ScalarRL (>=3 policies)
+    return run_matrix(pols, res, cfg, MatrixConfig(
+        scenarios=("S2", "drift-bb-surge"), seeds=(1,), vector=4))
+
+
+# ------------------------------------------------------------------ schema
+def test_matrix_schema_and_grid_shape(matrix, mini):
+    _, res = mini
+    assert matrix["schema"] == MATRIX_SCHEMA
+    assert matrix["columns"] == matrix_columns(res)
+    assert matrix["summary"]["n_cells"] == 2 * 3     # scenarios x policies
+    for row in matrix["rows"]:
+        assert list(row) == matrix["columns"]        # stable key order too
+
+
+def test_matrix_rows_flag_drift_and_family(matrix):
+    by_scenario = {}
+    for r in matrix["rows"]:
+        by_scenario.setdefault(r["scenario"], set()).add(r["drift"])
+    assert by_scenario == {"S2": {False}, "drift-bb-surge": {True}}
+    assert all(r["family"] in ("paper", "drift") for r in matrix["rows"])
+
+
+def test_matrix_is_deterministic(matrix, mini):
+    cfg, res = mini
+    again = run_matrix(default_policies(res), res, cfg, MatrixConfig(
+        scenarios=("S2", "drift-bb-surge"), seeds=(1,), vector=4))
+    assert again["rows"] == matrix["rows"]
+    assert again["summary"]["wins"] == matrix["summary"]["wins"]
+
+
+def test_vector_width_does_not_change_results(matrix, mini):
+    """Lockstep chunking is a throughput knob, never a semantics knob."""
+    cfg, res = mini
+    seq = run_matrix(default_policies(res), res, cfg, MatrixConfig(
+        scenarios=("S2", "drift-bb-surge"), seeds=(1,), vector=1))
+    assert seq["rows"] == matrix["rows"]
+
+
+def test_matrix_csv_round_trips_columns(matrix):
+    lines = matrix_csv(matrix).strip().splitlines()
+    assert lines[0] == ",".join(matrix["columns"])
+    assert len(lines) == 1 + len(matrix["rows"])
+    first = dict(zip(matrix["columns"], lines[1].split(",")))
+    assert first["policy"] == matrix["rows"][0]["policy"]
+
+
+def test_save_matrix_writes_json_and_csv(matrix, tmp_path):
+    jp, cp = save_matrix(matrix, str(tmp_path / "m.json"))
+    assert json.load(open(jp))["schema"] == MATRIX_SCHEMA
+    assert open(cp).readline().startswith("policy,scenario")
+
+
+def test_power_scenarios_need_power_resource(mini):
+    cfg, res = mini
+    with pytest.raises(ValueError, match="power"):
+        run_matrix(default_policies(res), res, cfg,
+                   MatrixConfig(scenarios=("S7",), seeds=(1,)))
+
+
+def test_wins_only_name_known_policies(matrix):
+    assert set(matrix["summary"]["wins"]) <= {"FCFS", "GA", "ScalarRL"}
+    assert sum(matrix["summary"]["wins"].values()) == 2   # one per cell
+
+
+# ------------------------------------------------------------- check_bench
+def _write(tmp_path, name, obj):
+    p = tmp_path / name
+    p.write_text(json.dumps(obj))
+    return str(p)
+
+
+BASE = {"equivalent": True, "decisions_per_sec": 100.0, "avg_wait": 50.0,
+        "rows": [{"util_node": 0.8}]}
+
+
+def test_check_bench_passes_within_tolerance(tmp_path):
+    res = _write(tmp_path, "r.json", {**BASE, "avg_wait": 55.0, "extra": 1})
+    base = _write(tmp_path, "b.json", BASE)
+    assert check_bench.main([res, base, "--rtol", "0.25"]) == 0
+
+
+def test_check_bench_fails_on_injected_regression(tmp_path):
+    """Acceptance criterion: an injected regression must fail the gate."""
+    res = _write(tmp_path, "r.json", {**BASE, "avg_wait": 90.0})
+    base = _write(tmp_path, "b.json", BASE)
+    assert check_bench.main([res, base, "--rtol", "0.25"]) == 1
+
+
+def test_check_bench_direction_awareness():
+    # higher-is-better: a drop fails, a rise passes
+    assert check_bench.compare({"decisions_per_sec": 10.0},
+                               {"decisions_per_sec": 100.0}, rtol=0.25)
+    assert not check_bench.compare({"decisions_per_sec": 500.0},
+                                   {"decisions_per_sec": 100.0}, rtol=0.25)
+    # lower-is-better: a rise fails, a drop passes
+    assert check_bench.compare({"avg_wait": 90.0}, {"avg_wait": 50.0},
+                               rtol=0.25)
+    assert not check_bench.compare({"avg_wait": 10.0}, {"avg_wait": 50.0},
+                                   rtol=0.25)
+    # plain keys: two-sided
+    assert check_bench.compare({"n_jobs": 10}, {"n_jobs": 100}, rtol=0.25)
+    assert check_bench.compare({"n_jobs": 200}, {"n_jobs": 100}, rtol=0.25)
+
+
+def test_check_bench_structural_contract():
+    errs = check_bench.compare({"a": 1}, {"a": 1, "missing": 2}, rtol=0.1)
+    assert any("missing" in e for e in errs)
+    errs = check_bench.compare({"equivalent": False}, {"equivalent": True},
+                               rtol=0.1)
+    assert errs
+    errs = check_bench.compare({"rows": []}, BASE, rtol=0.1)
+    assert any("rows" in e for e in errs)
+    # nested rows compare element-wise; extra result rows are fine
+    assert not check_bench.compare(
+        {**BASE, "rows": [{"util_node": 0.8}, {"util_node": 0.1}]},
+        BASE, rtol=0.1)
+
+
+def test_check_bench_unreadable_input_exits_2(tmp_path):
+    ok = _write(tmp_path, "ok.json", BASE)
+    assert check_bench.main([str(tmp_path / "nope.json"), ok]) == 2
+
+
+def test_committed_baselines_gate_current_smoke_outputs():
+    """The committed baselines must stay loadable and self-consistent."""
+    for name in ("scheduling_sweep", "matrix"):
+        base = json.load(open(REPO / "benchmarks" / "baselines"
+                              / f"{name}.json"))
+        assert not check_bench.compare(base, base, rtol=0.0)
+
+
+# -------------------------------------------------------------- run.py exit
+def test_bench_harness_exit_codes(capsys):
+    sys.path.insert(0, str(REPO))
+    try:
+        from benchmarks.run import run_benches
+    finally:
+        sys.path.pop(0)
+
+    def boom():
+        raise RuntimeError("injected")
+
+    failures = run_benches({"ok": lambda: {}, "boom": boom})
+    out = capsys.readouterr().out
+    assert failures == 1
+    assert "ERROR:RuntimeError: injected" in out
+    # a bench whose derived-summary contract breaks also fails the run
+    failures = run_benches({"eval_matrix": lambda: {"no": "summary"}})
+    assert failures == 1
+    assert "ERROR:derived" in capsys.readouterr().out

@@ -1,0 +1,203 @@
+"""Scenario registry + workload-drift subsystem (§V-D machinery)."""
+import numpy as np
+import pytest
+
+from repro.core import FCFSPolicy
+from repro.workloads import (DriftPhase, DriftSchedule, ScenarioSpec,
+                             ThetaConfig, apply_drift, build_jobs,
+                             generate_trace, get_scenario, register,
+                             run_phases, scenario_names, segment_jobs,
+                             step_schedule)
+
+CFG = ThetaConfig.mini(seed=3, duration_days=6, jobs_per_day=200)
+
+
+# ----------------------------------------------------------------- registry
+def test_registry_covers_every_family():
+    names = set(scenario_names())
+    assert {f"S{i}" for i in range(1, 11)} <= names
+    assert {"theta-base", "diurnal-heavy", "bursty-campaigns",
+            "size-skew-small", "size-skew-large"} <= names
+    assert set(scenario_names(family="drift")) == {
+        "drift-bb-surge", "drift-arrival-ramp", "drift-node-shift"}
+    assert set(scenario_names(tag="power")) == {f"S{i}" for i in range(6, 11)}
+
+
+def test_unknown_scenario_lists_known_names():
+    with pytest.raises(KeyError, match="drift-bb-surge"):
+        get_scenario("no-such-scenario")
+
+
+def test_duplicate_registration_rejected():
+    spec = get_scenario("S1")
+    with pytest.raises(ValueError, match="already registered"):
+        register(spec)
+    register(spec, overwrite=True)      # explicit overwrite allowed
+
+
+def test_builds_are_deterministic_per_seed():
+    a = build_jobs("bursty-campaigns", CFG, seed=2)
+    b = build_jobs("bursty-campaigns", CFG, seed=2)
+    c = build_jobs("bursty-campaigns", CFG, seed=3)
+    key = lambda js: [(j.jid, j.submit, tuple(sorted(j.demands.items())))
+                      for j in js]
+    assert key(a) == key(b)
+    assert key(a) != key(c)
+
+
+def test_paper_scenarios_match_direct_builds():
+    """Registry S-names delegate to scenarios.build_scenarios verbatim."""
+    from repro.workloads import build_scenarios
+    direct = build_scenarios(CFG, names=("S4",), seed=5)["S4"]
+    via_registry = build_jobs("S4", CFG, seed=5)
+    assert [(j.jid, j.demands["bb"]) for j in direct] == \
+        [(j.jid, j.demands["bb"]) for j in via_registry]
+
+
+def test_power_family_attaches_power_demands():
+    jobs = build_jobs("S7", CFG, seed=1)
+    assert all(j.demands.get("power", 0) >= 1 for j in jobs)
+
+
+def test_size_skew_shifts_node_demand_distribution():
+    small = build_jobs("size-skew-small", CFG, seed=1)
+    large = build_jobs("size-skew-large", CFG, seed=1)
+    med = lambda js: np.median([j.demands["node"] for j in js])
+    assert med(small) * 4 < med(large)
+
+
+def test_bursty_campaigns_compress_interarrivals():
+    base = build_jobs("theta-base", CFG, seed=1)
+    bursty = build_jobs("bursty-campaigns", CFG, seed=1)
+    gaps = lambda js: np.diff(sorted(j.submit for j in js))
+    # Same jobs, regrouped: many tiny within-burst gaps -> median drops.
+    assert np.median(gaps(bursty)) < 0.5 * np.median(gaps(base))
+    assert len(bursty) == len(base)
+
+
+def test_capacity_invariants_hold_for_all_scenarios():
+    cfg = ThetaConfig.mini(seed=0, duration_days=1.5, jobs_per_day=150)
+    for name in scenario_names():
+        for j in build_jobs(name, cfg, seed=1):
+            assert 0 < j.demands["node"] <= cfg.n_nodes, name
+            assert 0 <= j.demands["bb"] <= cfg.bb_units, name
+
+
+def test_runtime_registration_extension():
+    register(ScenarioSpec(
+        name="test-custom", family="synthetic",
+        build=lambda cfg, seed: generate_trace(cfg)[: 5],
+        description="tiny custom scenario"), overwrite=True)
+    assert len(build_jobs("test-custom", CFG)) == 5
+
+
+# -------------------------------------------------------------------- drift
+def test_drift_schedule_validation():
+    with pytest.raises(ValueError, match="sorted"):
+        DriftSchedule(phases=(DriftPhase(start=0.5), DriftPhase(start=0.0)))
+    with pytest.raises(ValueError, match="first at 0"):
+        DriftSchedule(phases=(DriftPhase(start=0.2),))
+    with pytest.raises(ValueError, match="rate_scale"):
+        DriftPhase(start=0.0, rate_scale=0.0)
+    with pytest.raises(ValueError, match="mode"):
+        DriftSchedule(phases=(DriftPhase(start=0.0),), mode="cubic")
+
+
+def test_seeded_mid_trace_shift_changes_bb_distribution():
+    """Acceptance criterion: pre/post-shift BB demand measurably differs."""
+    jobs = apply_drift(generate_trace(CFG),
+                       step_schedule(at=0.5, bb_fraction=0.85), CFG, seed=11)
+    t0, t1 = jobs[0].submit, jobs[-1].submit
+    mid = t0 + 0.5 * (t1 - t0)
+    pre = np.mean([j.demands["bb"] > 0 for j in jobs if j.submit < mid])
+    post = np.mean([j.demands["bb"] > 0 for j in jobs if j.submit >= mid])
+    assert pre < 0.55                    # base Darshan-style mix
+    assert post == pytest.approx(0.85, abs=0.06)
+    # deterministic for the seed
+    again = apply_drift(generate_trace(CFG),
+                        step_schedule(at=0.5, bb_fraction=0.85), CFG, seed=11)
+    assert [(j.jid, j.demands["bb"]) for j in again] == \
+        [(j.jid, j.demands["bb"]) for j in jobs]
+
+
+def test_drift_registry_scenario_applies_shift():
+    jobs = build_jobs("drift-bb-surge", CFG, seed=1)
+    t0, t1 = jobs[0].submit, jobs[-1].submit
+    mid = t0 + 0.5 * (t1 - t0)
+    pre = np.mean([j.demands["bb"] > 0 for j in jobs if j.submit < mid])
+    post = np.mean([j.demands["bb"] > 0 for j in jobs if j.submit >= mid])
+    assert post - pre > 0.2
+
+
+def test_rate_ramp_compresses_late_arrivals():
+    jobs = apply_drift(
+        generate_trace(CFG),
+        DriftSchedule(mode="ramp", phases=(
+            DriftPhase(start=0.0), DriftPhase(start=1.0, rate_scale=4.0))),
+        CFG, seed=1)
+    gaps = np.diff([j.submit for j in jobs])
+    q = len(gaps) // 4
+    assert gaps[-q:].mean() < 0.6 * gaps[:q].mean()
+
+
+def test_ramp_interpolates_between_phases():
+    sched = DriftSchedule(mode="ramp", phases=(
+        DriftPhase(start=0.0, node_scale=1.0),
+        DriftPhase(start=1.0, node_scale=3.0)))
+    assert sched.params_at(0.0)["node_scale"] == pytest.approx(1.0)
+    assert sched.params_at(0.5)["node_scale"] == pytest.approx(2.0)
+    assert sched.params_at(1.0)["node_scale"] == pytest.approx(3.0)
+    piece = DriftSchedule(phases=sched.phases)      # piecewise: hard step
+    assert piece.params_at(0.99)["node_scale"] == pytest.approx(1.0)
+    assert piece.params_at(1.0)["node_scale"] == pytest.approx(3.0)
+
+
+def test_node_scale_clamps_to_cluster():
+    sched = DriftSchedule(phases=(DriftPhase(start=0.0, node_scale=1e6),))
+    jobs = apply_drift(generate_trace(CFG), sched, CFG, seed=1)
+    assert all(j.demands["node"] == CFG.n_nodes for j in jobs)
+
+
+# ------------------------------------------------------------------- phases
+def test_segment_jobs_partitions_and_rebases():
+    jobs = generate_trace(CFG)
+    segs = segment_jobs(jobs, 3)
+    assert sum(len(s) for s in segs) == len(jobs)
+    for seg in segs:
+        assert seg[0].submit == 0.0
+        assert all(seg[i].submit <= seg[i + 1].submit
+                   for i in range(len(seg) - 1))
+
+
+def test_run_phases_isolates_sequential_policies_per_lane():
+    from repro.core import GAConfig, GAOptimizer
+    cfg = ThetaConfig.mini(seed=0, duration_days=0.5, jobs_per_day=100)
+    phases = segment_jobs(build_jobs("S1", cfg, seed=1), 2)
+    ga = lambda: GAOptimizer(GAConfig(population=6, generations=2))
+    # sharing one stateful sequential policy across lanes is rejected...
+    with pytest.raises(ValueError, match="policy_factory"):
+        run_phases(ga(), cfg.resources(), [phases, phases])
+    # ...per-lane instances via the factory give identical lanes
+    out = run_phases(None, cfg.resources(), [phases, phases],
+                     policy_factory=ga)
+    assert sorted((p.env, p.phase) for p in out) == \
+        [(0, 0), (0, 1), (1, 0), (1, 1)]
+    rows = {e: [p.result.metrics.as_row() for p in
+                sorted(out, key=lambda p: p.phase) if p.env == e]
+            for e in (0, 1)}
+    assert rows[0] == rows[1]
+
+
+def test_run_phases_yields_one_result_per_phase_via_refill():
+    cfg = ThetaConfig.mini(seed=0, duration_days=1.0, jobs_per_day=120)
+    phases = segment_jobs(build_jobs("drift-bb-surge", cfg, seed=1), 2)
+    out = run_phases(FCFSPolicy(), cfg.resources(), [phases, phases])
+    assert sorted((p.env, p.phase) for p in out) == \
+        [(0, 0), (0, 1), (1, 0), (1, 1)]
+    for p in out:
+        assert p.result.metrics.n_jobs == len(phases[p.phase]) \
+            - p.result.n_unstarted
+    # Both lanes play identical phases -> identical per-phase metrics.
+    by_env = {e: sorted((p.phase, p.result.metrics.as_row().items())
+                        for p in out if p.env == e) for e in (0, 1)}
+    assert by_env[0] == by_env[1]

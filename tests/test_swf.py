@@ -1,0 +1,76 @@
+"""Hardened SWF parsing against a deliberately messy fixture trace."""
+from pathlib import Path
+
+import pytest
+
+from repro.workloads import ThetaConfig, build_jobs, jobs_from_swf, register_swf
+
+FIXTURE = Path(__file__).parent / "data" / "sample.swf"
+
+
+@pytest.fixture(scope="module")
+def jobs():
+    return jobs_from_swf(str(FIXTURE), n_nodes=256)
+
+
+def test_skips_comments_blank_and_malformed(jobs):
+    # 10 data-ish lines; kept: jids 1,2,3,5,6,9 (see fixture comments).
+    assert [j.jid for j in jobs] == [1, 5, 2, 3, 6, 9]
+
+
+def test_sorted_by_submit_then_jid(jobs):
+    keys = [(j.submit, j.jid) for j in jobs]
+    assert keys == sorted(keys)
+
+
+def test_negative_submit_clamped(jobs):
+    j5 = next(j for j in jobs if j.jid == 5)
+    assert j5.submit == 0.0
+    # req_time (300) < runtime (600): walltime raised to the runtime.
+    assert j5.walltime == j5.runtime == 600.0
+
+
+def test_runtime_sentinel_falls_back_to_request(jobs):
+    j3 = next(j for j in jobs if j.jid == 3)
+    assert j3.runtime == 5400.0 and j3.walltime == 5400.0
+
+
+def test_procs_sentinel_falls_back_to_request(jobs):
+    j2 = next(j for j in jobs if j.jid == 2)
+    assert j2.demands["node"] == 128
+
+
+def test_oversized_request_clamped_to_cluster(jobs):
+    j6 = next(j for j in jobs if j.jid == 6)
+    assert j6.demands["node"] == 256
+
+
+def test_unschedulable_rows_dropped(jobs):
+    # jid 4 (all sentinels) and jid 8 (zero runtime, no request) are gone.
+    assert {4, 8}.isdisjoint({j.jid for j in jobs})
+
+
+def test_invariants_hold_for_every_job(jobs):
+    for j in jobs:
+        assert j.runtime > 0
+        assert j.walltime >= j.runtime
+        assert j.submit >= 0
+        assert 0 < j.demands["node"] <= 256
+        assert j.demands["bb"] == 0
+
+
+def test_max_jobs_truncates():
+    got = jobs_from_swf(str(FIXTURE), n_nodes=256, max_jobs=2)
+    assert len(got) == 2
+
+
+def test_swf_registry_scenario():
+    """SWF replay rides the scenario registry like any other family."""
+    spec = register_swf("swf-fixture", str(FIXTURE), overwrite=True)
+    assert spec.family == "swf"
+    cfg = ThetaConfig.mini(seed=0)
+    jobs = build_jobs("swf-fixture", cfg, seed=1)
+    assert [j.jid for j in jobs] == [1, 5, 2, 3, 6, 9]
+    # seed is irrelevant for a real trace: identical replay either way
+    assert [j.jid for j in build_jobs("swf-fixture", cfg, seed=9)] == \
+        [j.jid for j in jobs]

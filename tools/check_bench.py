@@ -1,0 +1,132 @@
+#!/usr/bin/env python3
+"""Gate a bench-result JSON against a committed baseline (CI bench-gate).
+
+    python tools/check_bench.py RESULT.json BASELINE.json [--rtol 0.25]
+
+The BASELINE is the contract: every leaf it contains must exist in the
+RESULT and match within tolerance — extra keys in the result are free
+(benches may grow fields without breaking the gate), but curate the
+baseline to stable fields only (drop wall-clock noise you don't want to
+gate, keep deterministic metric rows and generous-tolerance throughput).
+
+Numeric comparison is direction-aware by key name:
+
+* higher-is-better (``*speedup*``, ``*per_sec*``, ``*throughput*``,
+  ``util_*``): only a *drop* below ``base * (1 - rtol)`` fails;
+* lower-is-better (``*_us``, ``*_ms``, ``*seconds*``, ``*latency*``,
+  ``*wait*``, ``*slowdown*``, ``*loss*``): only a *rise* above
+  ``base * (1 + rtol)`` fails;
+* anything else: two-sided relative error > rtol fails.
+
+Non-numeric leaves (schema strings, ``equivalent`` flags) must match
+exactly.  Exit 1 with one line per violation; exit 2 on unreadable
+input.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Any, Dict, List
+
+HIGHER_IS_BETTER = ("speedup", "per_sec", "throughput", "util_")
+LOWER_IS_BETTER = ("_us", "_ms", "seconds", "latency", "wait",
+                   "slowdown", "loss")
+
+
+def _direction(key: str) -> str:
+    k = key.lower()
+    if any(p in k for p in HIGHER_IS_BETTER):
+        return "higher"
+    if any(p in k for p in LOWER_IS_BETTER):
+        return "lower"
+    return "both"
+
+
+def _is_number(x: Any) -> bool:
+    return isinstance(x, (int, float)) and not isinstance(x, bool)
+
+
+def compare(result: Any, baseline: Any, rtol: float, atol: float = 1e-9,
+            path: str = "$") -> List[str]:
+    """Violations of ``result`` against the ``baseline`` contract."""
+    errors: List[str] = []
+    if isinstance(baseline, dict):
+        if not isinstance(result, dict):
+            return [f"{path}: expected object, got {type(result).__name__}"]
+        for key, bval in baseline.items():
+            if key not in result:
+                errors.append(f"{path}.{key}: missing from result")
+                continue
+            errors.extend(compare(result[key], bval, rtol, atol,
+                                  f"{path}.{key}"))
+        return errors
+    if isinstance(baseline, list):
+        if not isinstance(result, list):
+            return [f"{path}: expected array, got {type(result).__name__}"]
+        if len(result) < len(baseline):
+            return [f"{path}: baseline has {len(baseline)} entries, "
+                    f"result only {len(result)}"]
+        for i, bval in enumerate(baseline):
+            errors.extend(compare(result[i], bval, rtol, atol, f"{path}[{i}]"))
+        return errors
+    key = path.rsplit(".", 1)[-1].split("[")[0]
+    if _is_number(baseline):
+        if not _is_number(result):
+            return [f"{path}: expected number, got {result!r}"]
+        lo = baseline - (abs(baseline) * rtol + atol)
+        hi = baseline + (abs(baseline) * rtol + atol)
+        direction = _direction(key)
+        if direction == "higher" and result < lo:
+            return [f"{path}: regressed {baseline} -> {result} "
+                    f"(below {lo:.6g}, higher is better)"]
+        if direction == "lower" and result > hi:
+            return [f"{path}: regressed {baseline} -> {result} "
+                    f"(above {hi:.6g}, lower is better)"]
+        if direction == "both" and not lo <= result <= hi:
+            return [f"{path}: drifted {baseline} -> {result} "
+                    f"(outside [{lo:.6g}, {hi:.6g}])"]
+        return []
+    if result != baseline:
+        return [f"{path}: expected {baseline!r}, got {result!r}"]
+    return []
+
+
+def check(result_path: str, baseline_path: str, rtol: float,
+          atol: float = 1e-9) -> List[str]:
+    with open(result_path) as f:
+        result = json.load(f)
+    with open(baseline_path) as f:
+        baseline = json.load(f)
+    return compare(result, baseline, rtol=rtol, atol=atol)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="fail (exit 1) when a bench JSON regresses vs a baseline")
+    ap.add_argument("result", help="freshly produced bench JSON")
+    ap.add_argument("baseline", help="committed baseline JSON (the contract)")
+    ap.add_argument("--rtol", type=float, default=0.25,
+                    help="relative tolerance (default 0.25)")
+    ap.add_argument("--atol", type=float, default=1e-9,
+                    help="absolute slack added to every bound")
+    args = ap.parse_args(argv)
+    try:
+        errors = check(args.result, args.baseline, rtol=args.rtol,
+                       atol=args.atol)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"check_bench: cannot load inputs: {e}", file=sys.stderr)
+        return 2
+    for e in errors:
+        print(f"REGRESSION {e}")
+    if errors:
+        print(f"check_bench: {len(errors)} violation(s) vs {args.baseline} "
+              f"(rtol={args.rtol})", file=sys.stderr)
+        return 1
+    print(f"check_bench: ok ({args.result} within rtol={args.rtol} "
+          f"of {args.baseline})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
