@@ -1,0 +1,235 @@
+"""Closed-loop load generator + latency harness for the decision service.
+
+    python -m benchmarks.bench_serving --smoke          # CI cell grid
+    python -m benchmarks.bench_serving --full --clients 1,4,16
+
+Each cell fixes (backend, max_wait, concurrent clients) and runs a
+closed loop: every client thread submits decision requests back-to-back
+against a pool of frozen mid-trace scheduling contexts, so offered load
+equals the service's achievable throughput at that concurrency.
+Reported per cell: decisions/sec and p50/p95/p99 end-to-end request
+latency, plus the observed micro-batch and shape-bucket behaviour
+behind them.  This is the repo's first *latency*-oriented hot path —
+the sweep/matrix benches measure offline replay throughput; this one
+measures what a live scheduler client would see.
+
+The ``max_wait`` dimension exposes the batching-policy tradeoff:
+``0`` (greedy dispatch) minimizes idle-service latency but under load
+forms ragged batches out of thread-wakeup ping-pong; a sub-millisecond
+wait lets each batch fill to the offered concurrency, which on CPU
+raises 8-client throughput to >=3x the single-client rate AND tightens
+p99 (orderly batches instead of wakeup jitter).  See docs/serving.md.
+
+Output schema ``mrsch.bench.serving/v1`` (stable: CI gates
+``results/bench/serving.json`` against ``benchmarks/baselines/``):
+cells appear in the deterministic (backend, max_wait, clients) grid
+order with flat ``*_ms`` / ``*_per_sec`` keys so ``tools/check_bench.py``
+applies its direction-aware tolerance to each.
+"""
+from __future__ import annotations
+
+import argparse
+import threading
+import time
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core import AgentConfig, FCFSPolicy, MRSchAgent
+from repro.serve import DecisionService, ServeConfig
+from repro.sim import Simulator
+from repro.workloads import ThetaConfig, build_jobs
+
+from .common import save_json
+
+SCHEMA = "mrsch.bench.serving/v1"
+
+
+def harvest_contexts(resources, jobs, n: int, depth: int = 6) -> List:
+    """Freeze ``n`` pending decisions, each a few decisions into its own
+    copy of the trace (FCFS-advanced).  A context owns references to its
+    simulator's cluster/queue/jobs, so it stays valid after the (never
+    advanced again) simulator is dropped."""
+    pool = []
+    for i in range(n):
+        sim = Simulator(resources, jobs, FCFSPolicy())
+        ctx = sim.next_decision()
+        for _ in range(depth + i % 5):        # stagger the depths
+            if ctx is None:
+                break
+            sim.post_action(sim.policy.select(ctx))
+            ctx = sim.next_decision()
+        if ctx is not None:
+            pool.append(ctx)
+    if not pool:
+        raise RuntimeError("trace too small to harvest serving contexts")
+    return pool
+
+
+def _percentiles(lat_s: Sequence[float]) -> Dict[str, float]:
+    ms = np.asarray(lat_s) * 1e3
+    return {
+        "mean_ms": round(float(ms.mean()), 3),
+        "p50_ms": round(float(np.percentile(ms, 50)), 3),
+        "p95_ms": round(float(np.percentile(ms, 95)), 3),
+        "p99_ms": round(float(np.percentile(ms, 99)), 3),
+    }
+
+
+def run_cell(service: DecisionService, ctxs: Sequence, clients: int,
+             requests_per_client: int, warmup: int = 8) -> Dict:
+    """One closed-loop cell: ``clients`` threads, back-to-back requests."""
+    for i in range(warmup):
+        service.decide(ctxs[i % len(ctxs)])
+    stats0 = service.stats()
+    latencies: List[List[float]] = [[] for _ in range(clients)]
+    barrier = threading.Barrier(clients + 1)
+
+    def client(k: int) -> None:
+        lat = latencies[k]
+        barrier.wait()
+        for r in range(requests_per_client):
+            ctx = ctxs[(k * 7919 + r) % len(ctxs)]
+            t0 = time.perf_counter()
+            service.decide(ctx)
+            lat.append(time.perf_counter() - t0)
+
+    threads = [threading.Thread(target=client, args=(k,))
+               for k in range(clients)]
+    for t in threads:
+        t.start()
+    barrier.wait()
+    t0 = time.perf_counter()
+    for t in threads:
+        t.join()
+    wall = time.perf_counter() - t0
+    stats1 = service.stats()
+    n = clients * requests_per_client
+    batches = stats1["batches"] - stats0["batches"]
+    # Cells share a service within one (backend, max_wait) group, so
+    # batch/bucket figures are deltas over this cell's closed loop only.
+    hist0, hist1 = stats0["batch_hist"], stats1["batch_hist"]
+    cell_max = max((k for k in hist1 if hist1[k] > hist0.get(k, 0)),
+                   default=0)
+    retraces = (stats1["buckets"]["compiles"]
+                - stats0["buckets"]["compiles"])
+    flat = [x for lat in latencies for x in lat]
+    return {
+        "clients": clients,
+        "requests": n,
+        "wall_seconds": round(wall, 4),
+        "decisions_per_sec": round(n / max(wall, 1e-9), 2),
+        **_percentiles(flat),
+        "mean_batch": round(n / max(batches, 1), 3),
+        "max_batch_seen": cell_max,
+        "bucket_retraces": retraces,     # warmup pre-traced: 0 expected
+    }
+
+
+def run(quick: bool = True, clients: Sequence[int] = (1, 2, 8),
+        backends: Sequence[str] = ("xla",), requests: Optional[int] = None,
+        max_batch: int = 16, waits_ms: Sequence[float] = (0.0, 0.5),
+        pool: int = 24) -> Dict:
+    """The (backend x max_wait x clients) cell grid on one scenario."""
+    cfg = ThetaConfig.mini(seed=0, duration_days=0.5, jobs_per_day=160)
+    resources = cfg.resources()
+    jobs = build_jobs("S1", cfg, seed=1)
+    total = requests or (320 if quick else 2000)
+    agent_cfg = AgentConfig(state_hidden=(256, 64) if quick else (1024, 256),
+                            state_out=32 if quick else 128,
+                            module_hidden=16 if quick else 64, seed=0)
+    ctxs = harvest_contexts(resources, jobs, pool)
+    cells: List[Dict] = []
+    for backend in backends:
+        agent = MRSchAgent(resources, agent_cfg)
+        if backend != "xla":
+            agent.set_backend(backend)
+        for wait_ms in waits_ms:
+            svc_cfg = ServeConfig(max_batch=max_batch,
+                                  max_wait_s=wait_ms / 1e3)
+            with DecisionService(agent, svc_cfg) as svc:
+                for c in clients:
+                    cell = run_cell(svc, ctxs, c, max(total // c, 1))
+                    cells.append({"backend": backend,
+                                  "max_wait_ms": wait_ms, **cell})
+    return {
+        "schema": SCHEMA,
+        "config": {
+            "scenario": "S1", "pool_contexts": len(ctxs),
+            "max_batch": max_batch, "clients": list(clients),
+            "waits_ms": list(waits_ms), "backends": list(backends),
+            "state_hidden": list(agent_cfg.state_hidden),
+            "quick": quick,
+        },
+        "cells": cells,
+        "summary": _summary(cells),
+    }
+
+
+def _summary(cells: Sequence[Dict]) -> Dict:
+    """Throughput scaling per (backend, wait): widest vs single client.
+
+    ``batched_speedup_<backend>`` is the acceptance number — measured at
+    the largest configured wait (the load-serving policy); greedy
+    dispatch reports separately as ``greedy_speedup_<backend>``.
+    """
+    out: Dict[str, object] = {}
+    for backend in dict.fromkeys(c["backend"] for c in cells):
+        for wait in sorted({c["max_wait_ms"] for c in cells
+                            if c["backend"] == backend}):
+            grp = [c for c in cells
+                   if c["backend"] == backend and c["max_wait_ms"] == wait]
+            single = next((c for c in grp if c["clients"] == 1), None)
+            widest = max(grp, key=lambda c: c["clients"])
+            if single is None or widest is single:
+                continue
+            speedup = round(widest["decisions_per_sec"]
+                            / max(single["decisions_per_sec"], 1e-9), 3)
+            key = (f"greedy_speedup_{backend}" if wait == 0
+                   else f"batched_speedup_{backend}")
+            out[key] = speedup
+            out[f"clients_{backend}"] = widest["clients"]
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="closed-loop decision-service load test")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI sizing (small agent, short closed loop; "
+                         "this is also the default)")
+    ap.add_argument("--full", action="store_true",
+                    help="big agent + long closed loop")
+    ap.add_argument("--clients", default=None,
+                    help="comma-separated concurrency cells (default 1,2,8)")
+    ap.add_argument("--requests", type=int, default=None,
+                    help="total requests per cell (split across clients)")
+    ap.add_argument("--backend", default="xla",
+                    help="comma-separated backends (xla[,pallas])")
+    ap.add_argument("--max-batch", type=int, default=16)
+    ap.add_argument("--waits-ms", default="0,0.5",
+                    help="comma-separated micro-batcher max_wait cells (ms)")
+    ap.add_argument("--out", default="serving",
+                    help="results/bench/<out>.json")
+    args = ap.parse_args(argv)
+    clients = (tuple(int(x) for x in args.clients.split(","))
+               if args.clients else (1, 2, 8))
+    out = run(quick=not args.full,
+              clients=clients, backends=tuple(args.backend.split(",")),
+              requests=args.requests, max_batch=args.max_batch,
+              waits_ms=tuple(float(x) for x in args.waits_ms.split(",")))
+    path = save_json(args.out, out)
+    for cell in out["cells"]:
+        print(f"{cell['backend']:7s} wait={cell['max_wait_ms']:<4g} "
+              f"clients={cell['clients']:<3d} "
+              f"{cell['decisions_per_sec']:>9.1f} dec/s  "
+              f"p50={cell['p50_ms']:.2f}ms p95={cell['p95_ms']:.2f}ms "
+              f"p99={cell['p99_ms']:.2f}ms  mean_batch={cell['mean_batch']}")
+    for k, v in out["summary"].items():
+        print(f"{k} = {v}")
+    print(f"wrote {path}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

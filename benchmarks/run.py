@@ -65,6 +65,15 @@ def _derived(name, out) -> str:
             derived += (f";train_speedup_N{vt['n_envs']}="
                         f"{vt['speedup']:.2f}x")
         return derived
+    if name == "serving":
+        s = out["summary"]
+        loaded = [c for c in out["cells"]
+                  if c["max_wait_ms"] > 0 and c["clients"] > 1]
+        derived = ";".join(f"{k}={v}x" for k, v in s.items()
+                           if "speedup" in k)
+        if loaded:
+            derived += f";p99_loaded={loaded[-1]['p99_ms']:.1f}ms"
+        return derived
     if name == "goal_adaptation_fig8_9":
         return (f"rBB_S1={out['S1']['mean']:.3f};"
                 f"rBB_S5={out['S5']['mean']:.3f}")
@@ -117,8 +126,8 @@ def main(argv=None) -> int:
     quick = not args.full
 
     from . import (bench_curriculum, bench_goal_adaptation, bench_overhead,
-                   bench_roofline, bench_scheduling, bench_state_module,
-                   bench_three_resource)
+                   bench_roofline, bench_scheduling, bench_serving,
+                   bench_state_module, bench_three_resource)
 
     benches = {
         "overhead_vF": lambda: bench_overhead.run(quick=quick),
@@ -131,6 +140,9 @@ def main(argv=None) -> int:
             quick=quick, vector=args.vector),
         "eval_matrix": lambda: bench_scheduling.run_matrix_bench(
             smoke=quick, vector=args.vector or 4),
+        "serving": lambda: bench_serving.run(
+            quick=quick,
+            backends=(args.backend,) if args.backend else ("xla",)),
         "goal_adaptation_fig8_9": lambda: bench_goal_adaptation.run(quick=quick),
         "three_resource_fig10": lambda: bench_three_resource.run(quick=quick),
     }

@@ -1,0 +1,96 @@
+"""Online decision serving: replay a registry scenario through the service.
+
+    PYTHONPATH=src python examples/serve_decisions.py [--scenario S1]
+        [--checkpoint agent.npz] [--watch-dir ckpts/] [--max-wait-ms 0]
+
+Starts a ``DecisionService`` on a trained (``--checkpoint``) or randomly
+initialized MRSch agent, replays a scenario from the workload registry
+through it (``ServiceSim`` — the identical trajectory a direct
+``Simulator`` run produces), and prints the scheduling metrics plus the
+end-to-end request latency histogram.  With ``--watch-dir`` a
+``CheckpointWatcher`` polls for new checkpoints and hot-swaps them into
+the service while it answers requests — drop a ``CheckpointManager``
+save into the directory from another process to watch a zero-downtime
+policy update.
+"""
+import argparse
+
+import numpy as np
+
+from repro.core import AgentConfig, MRSchAgent
+from repro.serve import CheckpointWatcher, DecisionService, ServeConfig, ServiceSim
+from repro.workloads import ThetaConfig, scenario_names
+
+
+def latency_histogram(lat_s, bins=12, width=46):
+    """Text histogram of request latencies (log-spaced buckets)."""
+    ms = np.asarray(lat_s) * 1e3
+    edges = np.logspace(np.log10(max(ms.min(), 1e-3)),
+                        np.log10(ms.max() + 1e-9), bins + 1)
+    counts, _ = np.histogram(ms, bins=edges)
+    peak = max(int(counts.max()), 1)
+    lines = []
+    for i, c in enumerate(counts):
+        bar = "#" * max(int(round(c / peak * width)), 1 if c else 0)
+        lines.append(f"{edges[i]:8.2f}-{edges[i + 1]:8.2f} ms "
+                     f"{c:6d} {bar}")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scenario", default="S1",
+                    help=f"registry scenario ({', '.join(scenario_names()[:6])}, ...)")
+    ap.add_argument("--seed", type=int, default=1)
+    ap.add_argument("--days", type=float, default=0.5)
+    ap.add_argument("--checkpoint", default=None,
+                    help="agent .npz from MRSchAgent.save (random init if omitted)")
+    ap.add_argument("--watch-dir", default=None,
+                    help="CheckpointManager directory to hot-reload from")
+    ap.add_argument("--max-batch", type=int, default=16)
+    ap.add_argument("--max-wait-ms", type=float, default=0.0)
+    args = ap.parse_args()
+
+    cfg = ThetaConfig.mini(seed=0, duration_days=args.days, jobs_per_day=160)
+    res = cfg.resources()
+    # Same architecture examples/train_scheduler.py trains and saves, so
+    # its results/mrsch_agent.npz loads here (load validates shapes).
+    agent = MRSchAgent(res, AgentConfig(
+        state_hidden=(1024, 256), state_out=128, module_hidden=64))
+    if args.checkpoint:
+        agent.load(args.checkpoint)
+        print(f"loaded {args.checkpoint}")
+
+    svc_cfg = ServeConfig(max_batch=args.max_batch,
+                          max_wait_s=args.max_wait_ms / 1e3)
+    with DecisionService(agent, svc_cfg) as svc:
+        watcher = None
+        if args.watch_dir:
+            watcher = CheckpointWatcher(svc, args.watch_dir,
+                                        poll_interval_s=0.5).start()
+        ssim = ServiceSim(svc, res, track_latency=True)
+        result = ssim.run_scenario(args.scenario, cfg, seed=args.seed)
+        if watcher is not None:
+            watcher.stop()
+            print(f"watcher: {watcher.stats()}")
+
+    row = result.metrics.as_row()
+    print(f"\n[{args.scenario}/seed{args.seed}] {result.decisions} decisions, "
+          f"{row['n_jobs']:.0f} jobs, makespan {result.makespan / 3600:.1f}h")
+    print(f"util_node={row['util_node']:.3f} util_bb={row['util_bb']:.3f} "
+          f"avg_wait={row['avg_wait'] / 60:.1f}min "
+          f"avg_slowdown={row['avg_slowdown']:.2f}")
+    st = svc.stats()
+    print(f"service: {st['requests']} requests in {st['batches']} batches "
+          f"(mean {st['mean_batch']}), buckets compiled "
+          f"{st['buckets']['compiles']} of {len(st['buckets']['buckets'])}, "
+          f"reloads={st['reloads']}")
+    lat = ssim.latencies_s
+    print(f"\nrequest latency (n={len(lat)}, "
+          f"p50={np.percentile(lat, 50) * 1e3:.2f}ms, "
+          f"p99={np.percentile(lat, 99) * 1e3:.2f}ms):")
+    print(latency_histogram(lat))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,2 +1,2 @@
-from .store import (CheckpointManager, latest_step, restore_pytree,
-                    save_pytree)
+from .store import (CheckpointManager, check_leaves_compat, latest_step,
+                    restore_pytree, save_pytree)

@@ -49,6 +49,37 @@ def _resolve_dtype(name: str) -> np.dtype:
         return np.dtype(getattr(ml_dtypes, name))
 
 
+def check_leaves_compat(expected, got, context: str = "checkpoint") -> None:
+    """Raise ``ValueError`` unless ``got`` matches ``expected`` leaf for leaf.
+
+    Both are flat leaf sequences (``jax.tree_util.tree_flatten`` order).
+    Guards every path that unflattens foreign arrays into a live param
+    tree — ``MRSchAgent.load`` and the serving layer's hot-reload — so an
+    incompatible checkpoint (different window, hidden widths, resource
+    count) fails loudly instead of silently producing a corrupt tree.
+    """
+    expected = list(expected)
+    got = list(got)
+    if len(got) != len(expected):
+        raise ValueError(
+            f"{context}: incompatible parameter tree — {len(got)} leaves, "
+            f"expected {len(expected)} (was it saved from a different "
+            "architecture?)")
+    for i, (e, g) in enumerate(zip(expected, got)):
+        e_shape, g_shape = tuple(np.shape(e)), tuple(np.shape(g))
+        if e_shape != g_shape:
+            raise ValueError(
+                f"{context}: leaf {i} shape mismatch — checkpoint "
+                f"{g_shape}, expected {e_shape} (different window / hidden "
+                "sizes / resource count?)")
+        e_dtype = np.asarray(e).dtype if not hasattr(e, "dtype") else e.dtype
+        g_dtype = np.asarray(g).dtype if not hasattr(g, "dtype") else g.dtype
+        if g_dtype != e_dtype:
+            raise ValueError(
+                f"{context}: leaf {i} dtype mismatch — checkpoint "
+                f"{g_dtype}, expected {e_dtype}")
+
+
 def save_pytree(tree, directory: str, step: int, extra: Optional[dict] = None
                 ) -> str:
     """Atomic synchronous save.
@@ -126,11 +157,25 @@ def restore_pytree(template, directory: str, step: Optional[int] = None,
     return jax.tree_util.tree_unflatten(treedef, out), manifest
 
 
-def latest_step(directory: str) -> Optional[int]:
+def _step_numbers(directory: str) -> list:
+    """Committed checkpoint steps in ``directory``, ascending.  Entries
+    that merely look step-like (``step_backup/`` left by an operator)
+    are skipped, not fatal — the serving hot-reload watcher polls this
+    on a loop and must keep finding real checkpoints regardless."""
     if not os.path.isdir(directory):
-        return None
-    steps = [int(n.split("_")[1]) for n in os.listdir(directory)
-             if n.startswith("step_") and not n.endswith(".tmp")]
+        return []
+    steps = []
+    for n in os.listdir(directory):
+        parts = n.split("_")
+        # Exactly step_<digits>: in-flight .tmp commits, step_7_backup
+        # copies, and other step-ish names are all not committed steps.
+        if len(parts) == 2 and parts[0] == "step" and parts[1].isdigit():
+            steps.append(int(parts[1]))
+    return sorted(steps)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    steps = _step_numbers(directory)
     return max(steps) if steps else None
 
 
@@ -185,9 +230,7 @@ class CheckpointManager:
         return restore_pytree(template, self.directory, None, shardings)
 
     def _gc(self):
-        steps = sorted(
-            int(n.split("_")[1]) for n in os.listdir(self.directory)
-            if n.startswith("step_") and not n.endswith(".tmp"))
+        steps = _step_numbers(self.directory)
         for s in steps[: -self.keep]:
             shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"),
                           ignore_errors=True)

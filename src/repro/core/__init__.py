@@ -2,8 +2,10 @@
 from .agent import AgentConfig, MRSchAgent
 from .dfp import (DFPConfig, action_values, greedy_action,
                   greedy_actions_packed, init_params, loss_fn, predict)
-from .encoding import EncodingConfig, encode_measurement, encode_state, encoding_for
-from .goal import goal_vector
+from .encoding import (EncodingConfig, decision_row_dim, encode_decision_row,
+                       encode_measurement, encode_state, encoding_for,
+                       pad_decision_rows)
+from .goal import ctx_goal, goal_vector
 from .policies import FCFSPolicy, GAConfig, GAOptimizer, ScalarRLConfig, ScalarRLPolicy
 from .replay import Episode, EpisodeRecorder, ReplayBuffer, VectorEpisodeRecorder
 from .train import (EnvSlot, TrainConfig, TrainLog, evaluate,
@@ -12,7 +14,8 @@ from .train import (EnvSlot, TrainConfig, TrainLog, evaluate,
 __all__ = [
     "AgentConfig", "MRSchAgent", "DFPConfig", "action_values", "greedy_action",
     "greedy_actions_packed", "init_params", "loss_fn", "predict", "EncodingConfig", "encode_measurement",
-    "encode_state", "encoding_for", "goal_vector", "FCFSPolicy", "GAConfig",
+    "encode_state", "encoding_for", "decision_row_dim", "encode_decision_row",
+    "pad_decision_rows", "ctx_goal", "goal_vector", "FCFSPolicy", "GAConfig",
     "GAOptimizer", "ScalarRLConfig", "ScalarRLPolicy", "Episode",
     "EpisodeRecorder", "ReplayBuffer", "VectorEpisodeRecorder",
     "EnvSlot", "TrainConfig", "TrainLog", "evaluate", "slots_from_jobsets",

@@ -22,8 +22,9 @@ from ..sim.cluster import ResourceSpec
 from ..sim.simulator import SchedContext
 from .dfp import (DFPConfig, action_values, greedy_actions_packed,
                   init_params, loss_fn)
-from .encoding import EncodingConfig, encode_measurement, encode_state
-from .goal import goal_vector
+from .encoding import (EncodingConfig, decision_row_dim, encode_decision_row,
+                       encode_measurement, encode_state, pad_decision_rows)
+from .goal import ctx_goal
 from .replay import EpisodeRecorder, ReplayBuffer, VectorEpisodeRecorder
 
 
@@ -132,21 +133,8 @@ class MRSchAgent:
 
     # ---------------------------------------------------------------- policy
     def _ctx_goal(self, ctx: SchedContext) -> np.ndarray:
-        """Eq. (1) goal vector against the context's OWN cluster capacities.
-
-        Identical to using the agent's reference capacities on the
-        homogeneous cluster; on scaled-down training environments (see
-        ``repro.workloads.sweep.build_train_mix``) it keeps the contention
-        normalization honest for that environment.
-        """
-        names = self.enc.resource_names
-        cache = ctx.cluster.__dict__.setdefault("_goal_caps", {})
-        cached = cache.get(names)
-        if cached is None:
-            caps = ctx.cluster.capacities
-            cached = cache[names] = np.maximum(
-                np.asarray([caps[n] for n in names], np.float64), 1.0)
-        return goal_vector(ctx, names, cached)
+        """Eq. (1) goal for this context (shared with the serving layer)."""
+        return ctx_goal(ctx, self.enc.resource_names)
 
     def select(self, ctx: SchedContext) -> int:
         state = encode_state(self.enc, ctx)
@@ -194,17 +182,14 @@ class MRSchAgent:
                 "Simulator.run per trace")
         n = len(ctxs)
         sd, m, a = self.enc.state_dim, self.enc.n_resources, self.config.window
-        # One row per decision ([state | meas | goal | valid]), encoded
-        # straight into a fresh buffer so a round costs one host->device
-        # transfer and zero intermediate copies.
-        feats = np.zeros((n, sd + 2 * m + a), dtype=np.float32)
+        # One packed row per decision (layout shared with the serving
+        # layer: encoding.encode_decision_row), encoded straight into a
+        # fresh buffer so a round costs one host->device transfer and
+        # zero intermediate copies.
+        feats = np.zeros((n, decision_row_dim(self.enc, a)), dtype=np.float32)
         for i, c in enumerate(ctxs):
-            encode_state(self.enc, c, out=feats[i, :sd])
-            feats[i, sd:sd + m] = encode_measurement(self.enc, c)
-            goal = self._ctx_goal(c)
-            feats[i, sd + m:sd + 2 * m] = goal
-            self.goal_log.append(goal)
-            feats[i, sd + 2 * m:sd + 2 * m + min(len(c.window), a)] = 1.0
+            self.goal_log.append(
+                encode_decision_row(self.enc, c, a, out=feats[i]))
         if not self.training:
             return self._greedy_rows(feats)
         # Epsilon-greedy: draw exploration first (host RNG in row order, the
@@ -238,14 +223,8 @@ class MRSchAgent:
         transfer through the slow python ``device_put`` path.
         """
         n = rows.shape[0]
-        sd, m = self.enc.state_dim, self.enc.n_resources
         width = 1 << max(n - 1, 0).bit_length()
-        if width == n:
-            packed = rows
-        else:
-            packed = np.zeros((width, rows.shape[1]), dtype=np.float32)
-            packed[:n] = rows
-            packed[n:, sd + 2 * m:] = 1.0
+        packed = pad_decision_rows(rows, width, self.enc)
         acts = greedy_actions_packed(self.params, self.dfp, packed)
         return np.asarray(acts)[:n].astype(np.int32)
 
@@ -304,9 +283,27 @@ class MRSchAgent:
                  **{f"p{i}": np.asarray(x) for i, x in enumerate(flat)})
 
     def load(self, path: str) -> None:
+        """Restore ``save``d parameters, validating architecture compatibility.
+
+        The checkpoint must match the agent's current parameter tree leaf
+        for leaf (count, shape, dtype) — loading a checkpoint trained with
+        a different window / hidden widths / resource count raises a clear
+        ``ValueError`` instead of silently unflattening incompatible
+        leaves into the live tree.
+        """
+        from ..checkpoint import check_leaves_compat
         data = np.load(path)
-        flat = [jnp.asarray(data[f"p{i}"]) for i in range(int(data["n"]))]
-        treedef = jax.tree_util.tree_structure(self.params)
-        self.params = jax.tree_util.tree_unflatten(treedef, flat)
+        expected, treedef = jax.tree_util.tree_flatten(self.params)
+        n = int(data["n"])
+        missing = [f"p{i}" for i in range(n) if f"p{i}" not in data.files]
+        if missing:
+            raise ValueError(
+                f"load({path}): checkpoint claims {n} leaves but arrays "
+                f"{missing[:3]}{'...' if len(missing) > 3 else ''} are "
+                "absent (truncated or hand-edited archive?)")
+        got = [data[f"p{i}"] for i in range(n)]
+        check_leaves_compat(expected, got, context=f"load({path})")
+        self.params = jax.tree_util.tree_unflatten(
+            treedef, [jnp.asarray(x) for x in got])
         self.epsilon = float(data["epsilon"])
         self.opt_state = adam_init(self.params)

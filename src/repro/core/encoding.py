@@ -22,6 +22,7 @@ import numpy as np
 from ..sim.cluster import Cluster
 from ..sim.job import Job
 from ..sim.simulator import SchedContext
+from .goal import ctx_goal
 
 DAY = 86400.0
 
@@ -127,6 +128,47 @@ def encode_measurement(cfg: EncodingConfig, ctx: SchedContext) -> np.ndarray:
     """Measurement vector = instantaneous utilization per resource (§III-A)."""
     util = ctx.cluster.utilization()
     return util.astype(np.float32)
+
+
+# ------------------------------------------------------------- packed rows
+# One decision = one packed row [state | meas | goal | valid-mask]; the
+# batched agent path (MRSchAgent.select_batch / _greedy_rows) and the
+# decision service (repro.serve) MUST agree on this layout byte for byte
+# — bit-identical serving depends on it — so it is defined only here.
+
+def decision_row_dim(cfg: EncodingConfig, n_actions: int) -> int:
+    return cfg.state_dim + 2 * cfg.n_resources + n_actions
+
+
+def encode_decision_row(cfg: EncodingConfig, ctx: SchedContext,
+                        n_actions: int, out: np.ndarray,
+                        goal: Optional[np.ndarray] = None) -> np.ndarray:
+    """Fill one packed decision row in place; returns the goal used.
+
+    ``out`` must be a zeroed float32 buffer of ``decision_row_dim``.
+    ``goal`` overrides the Eq. (1) context goal (per-request objective
+    steering in the serving layer)."""
+    sd, m = cfg.state_dim, cfg.n_resources
+    encode_state(cfg, ctx, out=out[:sd])
+    out[sd:sd + m] = encode_measurement(cfg, ctx)
+    if goal is None:
+        goal = ctx_goal(ctx, cfg.resource_names)
+    out[sd + m:sd + 2 * m] = goal
+    out[sd + 2 * m:sd + 2 * m + min(len(ctx.window), n_actions)] = 1.0
+    return goal
+
+
+def pad_decision_rows(rows: np.ndarray, width: int,
+                      cfg: EncodingConfig) -> np.ndarray:
+    """Pad packed rows up to ``width``: padded rows are valid everywhere
+    and their actions are discarded by the caller."""
+    n = rows.shape[0]
+    if width == n:
+        return rows
+    packed = np.zeros((width, rows.shape[1]), dtype=np.float32)
+    packed[:n] = rows
+    packed[n:, cfg.state_dim + 2 * cfg.n_resources:] = 1.0
+    return packed
 
 
 def encoding_for(cluster: Cluster, window: int,

@@ -16,6 +16,26 @@ import numpy as np
 from ..sim.simulator import SchedContext
 
 
+def ctx_goal(ctx: SchedContext, resource_names: Sequence[str]) -> np.ndarray:
+    """Eq. (1) goal vector against the context's OWN cluster capacities.
+
+    Identical to using the reference capacities on the homogeneous
+    cluster; on scaled-down training environments (see
+    ``repro.workloads.sweep.build_train_mix``) it keeps the contention
+    normalization honest for that environment.  The capacity array is
+    cached on the cluster instance — this runs on every decision, for
+    the agent's sequential/batched paths and the serving layer alike.
+    """
+    names = tuple(resource_names)
+    cache = ctx.cluster.__dict__.setdefault("_goal_caps", {})
+    cached = cache.get(names)
+    if cached is None:
+        caps = ctx.cluster.capacities
+        cached = cache[names] = np.maximum(
+            np.asarray([caps[n] for n in names], np.float64), 1.0)
+    return goal_vector(ctx, names, cached)
+
+
 def goal_vector(ctx: SchedContext, resource_names: Sequence[str],
                 capacities: Sequence[int]) -> np.ndarray:
     names = tuple(resource_names)

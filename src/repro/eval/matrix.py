@@ -32,7 +32,7 @@ import numpy as np
 from ..core.policies import (FCFSPolicy, GAConfig, GAOptimizer,
                              ScalarRLConfig, ScalarRLPolicy)
 from ..sim.cluster import ResourceSpec
-from ..sim.simulator import SimConfig, SimResult
+from ..sim.simulator import SimResult, sim_config
 from ..sim.vector import VectorSimulator
 from ..workloads.registry import build_jobs, get_scenario
 from ..workloads.theta import ThetaConfig
@@ -135,7 +135,7 @@ def run_matrix(policies: Mapping[str, PolicyFactory],
                                     for seed in cfg.seeds]
     traces = {cell: build_jobs(cell[0], theta, seed=cell[1])
               for cell in cells}
-    sim_cfg = SimConfig(window=cfg.window, backfill=cfg.backfill)
+    sim_cfg = sim_config(window=cfg.window, backfill=cfg.backfill)
     rows: List[Dict] = []
     batched_policies = 0
     for name, factory in policies.items():

@@ -1,0 +1,13 @@
+"""Online scheduling-decision service: micro-batched DFP inference with
+hot-reloadable checkpoints.  See docs/serving.md."""
+from .batcher import MicroBatcher, Ticket
+from .buckets import BucketCache, bucket_widths
+from .reload import CheckpointWatcher
+from .replay import ServicePolicy, ServiceSim
+from .service import DecisionService, ServeConfig
+
+__all__ = [
+    "MicroBatcher", "Ticket", "BucketCache", "bucket_widths",
+    "CheckpointWatcher", "ServicePolicy", "ServiceSim",
+    "DecisionService", "ServeConfig",
+]

@@ -1,12 +1,14 @@
 from .cluster import Cluster, ResourceSpec
 from .job import Job
 from .metrics import MetricsAccumulator, ScheduleMetrics
-from .simulator import SchedContext, SimConfig, SimResult, Simulator, run_trace
+from .simulator import (SchedContext, SimConfig, SimResult, Simulator,
+                        run_trace, sim_config)
 from .vector import (BatchSchedulingPolicy, VectorSimulator, VectorStats,
                      run_traces)
 
 __all__ = [
     "Cluster", "ResourceSpec", "Job", "MetricsAccumulator", "ScheduleMetrics",
     "SchedContext", "SimConfig", "SimResult", "Simulator", "run_trace",
+    "sim_config",
     "BatchSchedulingPolicy", "VectorSimulator", "VectorStats", "run_traces",
 ]

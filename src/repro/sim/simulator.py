@@ -56,6 +56,26 @@ class SimConfig:
     max_events: int = 50_000_000
 
 
+def sim_config(window: int = 10, backfill: bool = True,
+               max_events: Optional[int] = None) -> SimConfig:
+    """Validated ``SimConfig`` from the ``(window, backfill)`` pair.
+
+    Every harness that fans traces over the engine (sweep, drift phases,
+    the evaluation matrix, service-routed replay) plumbs the same two
+    knobs; this is the one place they become a ``SimConfig``, so the
+    validation — and any future knob — lands everywhere at once.
+    """
+    window = int(window)
+    if window < 1:
+        raise ValueError(f"window must be >= 1, got {window}")
+    cfg = SimConfig(window=window, backfill=bool(backfill))
+    if max_events is not None:
+        if int(max_events) < 1:
+            raise ValueError(f"max_events must be >= 1, got {max_events}")
+        cfg.max_events = int(max_events)
+    return cfg
+
+
 @dataclass
 class SimResult:
     metrics: ScheduleMetrics
@@ -243,4 +263,4 @@ def run_trace(resources, jobs, policy, window: int = 10,
               backfill: bool = True) -> SimResult:
     """Convenience one-shot simulation."""
     return Simulator(resources, jobs, policy,
-                     SimConfig(window=window, backfill=backfill)).run()
+                     sim_config(window=window, backfill=backfill)).run()

@@ -31,7 +31,7 @@ import numpy as np
 
 from ..sim.cluster import ResourceSpec
 from ..sim.job import Job
-from ..sim.simulator import SimConfig, SimResult, Simulator
+from ..sim.simulator import SimResult, Simulator, sim_config
 from ..sim.vector import VectorSimulator
 from .scenarios import bb_pool_units
 from .theta import ThetaConfig
@@ -218,7 +218,7 @@ def run_phases(policy, resources: Sequence[ResourceSpec],
     to give every lane its own instance; sharing a ``select_batch``-less
     policy across >1 lanes is rejected.
     """
-    sim_cfg = SimConfig(window=window, backfill=backfill)
+    sim_cfg = sim_config(window=window, backfill=backfill)
     if policy_factory is not None:
         env_policies = [policy_factory() for _ in phases_per_env]
         shared = None

@@ -21,7 +21,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 from ..core.train import EnvSlot
 from ..sim.cluster import ResourceSpec
 from ..sim.job import Job
-from ..sim.simulator import SimConfig, SimResult, Simulator
+from ..sim.simulator import SimResult, Simulator, sim_config
 from ..sim.vector import VectorSimulator
 from .scenarios import build_scenarios
 from .theta import ThetaConfig
@@ -110,7 +110,7 @@ def run_sweep(resources: Sequence[ResourceSpec],
     advances N environments in lockstep with batched policy inference.
     Tasks beyond N are processed in successive groups of N.
     """
-    sim_cfg = SimConfig(window=window, backfill=backfill)
+    sim_cfg = sim_config(window=window, backfill=backfill)
     t0 = time.perf_counter()
     results: List[SimResult] = []
     vector_stats: List[Dict] = []

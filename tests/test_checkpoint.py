@@ -189,3 +189,70 @@ def test_train_loop_restart_resumes(tmp_path):
                     ckpt_every=2, log_every=10)
     assert r2.restored_from == 4
     assert r2.steps == 4                        # only the remaining steps
+
+
+# ------------------------------------------------------------ agent.load
+def _tiny_agent(state_hidden=(32, 16)):
+    from repro.core import AgentConfig, MRSchAgent
+    from repro.sim import ResourceSpec
+    res = [ResourceSpec("node", 16), ResourceSpec("bb", 8)]
+    return MRSchAgent(res, AgentConfig(state_hidden=state_hidden,
+                                       state_out=8, module_hidden=4))
+
+
+def test_agent_load_roundtrip(tmp_path):
+    a = _tiny_agent()
+    a.epsilon = 0.37
+    path = str(tmp_path / "agent.npz")
+    a.save(path)
+    b = _tiny_agent()
+    b.load(path)
+    assert b.epsilon == 0.37
+    for x, y in zip(jax.tree_util.tree_leaves(a.params),
+                    jax.tree_util.tree_leaves(b.params)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_agent_load_rejects_wrong_width(tmp_path):
+    """A checkpoint from a different architecture must fail loudly, not
+    silently unflatten incompatible leaves into the live tree."""
+    narrow = _tiny_agent(state_hidden=(16, 8))
+    path = str(tmp_path / "narrow.npz")
+    narrow.save(path)
+    wide = _tiny_agent(state_hidden=(32, 16))
+    before = jax.tree_util.tree_leaves(wide.params)
+    with pytest.raises(ValueError, match="shape mismatch"):
+        wide.load(path)
+    after = jax.tree_util.tree_leaves(wide.params)
+    for x, y in zip(before, after):             # params untouched on failure
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_agent_load_rejects_wrong_leaf_count(tmp_path):
+    a = _tiny_agent()
+    flat, _ = jax.tree_util.tree_flatten(a.params)
+    path = str(tmp_path / "truncated.npz")
+    np.savez(path, n=len(flat) - 2, epsilon=0.5,
+             **{f"p{i}": np.asarray(x) for i, x in enumerate(flat[:-2])})
+    with pytest.raises(ValueError, match="leaves"):
+        a.load(path)
+
+
+def test_check_leaves_compat_dtype():
+    from repro.checkpoint import check_leaves_compat
+    good = [np.zeros((2, 3), np.float32)]
+    with pytest.raises(ValueError, match="dtype mismatch"):
+        check_leaves_compat(good, [np.zeros((2, 3), np.float64)])
+    check_leaves_compat(good, [np.zeros((2, 3), np.float32)])  # no raise
+
+
+def test_agent_load_rejects_truncated_archive(tmp_path):
+    """n claiming more leaves than the archive holds is a ValueError,
+    not a KeyError from deep inside np.load."""
+    a = _tiny_agent()
+    flat, _ = jax.tree_util.tree_flatten(a.params)
+    path = str(tmp_path / "claims_more.npz")
+    np.savez(path, n=len(flat) + 2, epsilon=0.5,
+             **{f"p{i}": np.asarray(x) for i, x in enumerate(flat)})
+    with pytest.raises(ValueError, match="absent"):
+        a.load(path)

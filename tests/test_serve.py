@@ -1,0 +1,378 @@
+"""Decision service: micro-batching, concurrency determinism, shape-bucket
+compile cache, checkpoint hot-reload, and service-routed replay parity."""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.core import AgentConfig, MRSchAgent
+from repro.core.dfp import greedy_action
+from repro.serve import (BucketCache, CheckpointWatcher, DecisionService,
+                         MicroBatcher, ServeConfig, ServiceSim, bucket_widths)
+from repro.sim import (Job, ResourceSpec, Simulator, run_trace, run_traces,
+                       sim_config)
+
+RES = [ResourceSpec("node", 16), ResourceSpec("bb", 8)]
+
+
+def synth_jobs(seed: int, n: int = 40):
+    rng = np.random.default_rng(seed)
+    jobs, t = [], 0.0
+    for i in range(n):
+        t += float(rng.exponential(40.0))
+        runtime = float(rng.uniform(20, 300))
+        jobs.append(Job(jid=i, submit=t, runtime=runtime,
+                        walltime=runtime * float(rng.uniform(1.0, 2.0)),
+                        demands={"node": int(rng.integers(1, 12)),
+                                 "bb": int(rng.integers(0, 6))}))
+    return jobs
+
+
+def small_agent(seed: int = 0, backend: str = "xla") -> MRSchAgent:
+    return MRSchAgent(RES, AgentConfig(
+        state_hidden=(32, 16), state_out=8, module_hidden=4, seed=seed,
+        backend=backend))
+
+
+def harvest_contexts(agent, n_envs: int = 6, depth: int = 5):
+    """Frozen mid-trace contexts: step each env a few decisions in, then
+    freeze its pending decision.  A context owns references to its
+    simulator's cluster/queue/jobs, so it stays valid after the (never
+    advanced again) simulator is dropped."""
+    ctxs = []
+    for s in range(n_envs):
+        sim = Simulator(RES, synth_jobs(s), agent)
+        ctx = sim.next_decision()
+        for _ in range(depth):
+            if ctx is None:
+                break
+            sim.post_action(agent.select(ctx))
+            ctx = sim.next_decision()
+        if ctx is not None:
+            ctxs.append(ctx)
+    assert len(ctxs) >= 4
+    return ctxs
+
+
+def assert_results_equal(a, b):
+    assert a.metrics.as_row() == b.metrics.as_row()
+    assert a.decisions == b.decisions
+    assert a.n_unstarted == b.n_unstarted
+    assert [(j.jid, j.start, j.end) for j in a.jobs] \
+        == [(j.jid, j.start, j.end) for j in b.jobs]
+
+
+# ---------------------------------------------------------------- batcher
+def test_batcher_results_match_payloads():
+    with MicroBatcher(lambda xs: [x * 10 for x in xs], max_batch=4) as mb:
+        tickets = [mb.submit(i) for i in range(17)]
+        assert [t.result(10.0) for t in tickets] == [i * 10 for i in range(17)]
+    st = mb.stats()
+    assert st["requests"] == 17
+    assert st["max_batch_seen"] <= 4
+
+
+def test_batcher_error_delivered_to_batch():
+    def boom(xs):
+        raise RuntimeError("model exploded")
+    with MicroBatcher(boom, max_batch=2) as mb:
+        t = mb.submit(1)
+        with pytest.raises(RuntimeError, match="model exploded"):
+            t.result(10.0)
+
+
+def test_batcher_submit_requires_running():
+    mb = MicroBatcher(lambda xs: xs)
+    with pytest.raises(RuntimeError, match="not running"):
+        mb.submit(1)
+    mb.start()
+    t = mb.submit(2)
+    assert t.result(10.0) == 2
+    mb.stop()
+    with pytest.raises(RuntimeError, match="not running"):
+        mb.submit(3)
+
+
+def test_batcher_max_wait_coalesces():
+    """With a wait budget the worker holds the batch open for stragglers
+    instead of dispatching the first payload alone."""
+    with MicroBatcher(lambda xs: xs, max_batch=8, max_wait_s=0.2) as mb:
+        tickets = []
+
+        def client(i):
+            tickets.append(mb.submit(i))
+        threads = [threading.Thread(target=client, args=(i,))
+                   for i in range(6)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        for t in tickets:
+            t.result(10.0)
+    st = mb.stats()
+    assert st["requests"] == 6
+    assert st["max_batch_seen"] >= 2          # some coalescing happened
+
+
+# ---------------------------------------------------------------- buckets
+def test_bucket_widths_and_lookup():
+    assert bucket_widths(1) == (1,)
+    assert bucket_widths(8) == (1, 2, 4, 8)
+    assert bucket_widths(12) == (1, 2, 4, 8, 16)
+    cache = BucketCache(12)
+    assert cache.width_for(1) == 1
+    assert cache.width_for(3) == 4
+    assert cache.width_for(12) == 16
+    with pytest.raises(ValueError):
+        cache.width_for(17)
+    with pytest.raises(ValueError):
+        cache.width_for(0)
+
+
+def test_bucket_cache_counts_compiles_once():
+    cache = BucketCache(4)
+    assert cache.record(4) is True            # first dispatch = trace
+    assert cache.record(4) is False
+    st = cache.stats()
+    assert st["compiles"] == 1
+    assert st["dispatches"] == 2
+    assert st["bucket_hits"] == 1
+
+
+def test_service_steady_state_never_retraces():
+    """After warmup every batch width maps to an already-compiled bucket:
+    the compile count is pinned at the bucket count forever."""
+    agent = small_agent()
+    with DecisionService(agent, ServeConfig(max_batch=8)) as svc:
+        n_buckets = len(svc._buckets.widths)
+        assert svc.stats()["buckets"]["compiles"] == n_buckets  # warmup
+        ctxs = harvest_contexts(agent)
+        for width in (1, 2, 3, len(ctxs)):    # mixed widths, incl. non-pow2
+            svc.decide_many(ctxs[:width])
+        st = svc.stats()["buckets"]
+        assert st["compiles"] == n_buckets    # no steady-state retrace
+        assert st["bucket_hits"] > 0
+
+
+# ---------------------------------------------------------------- determinism
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_concurrent_clients_bit_identical(backend):
+    """N client threads through the micro-batcher receive bit-identical
+    actions to sequential agent.select on the same contexts."""
+    agent = small_agent(backend=backend)
+    ctxs = harvest_contexts(agent, n_envs=6 if backend == "xla" else 4)
+    expected = [agent.select(c) for c in ctxs]
+    with DecisionService(agent, ServeConfig(max_batch=8,
+                                            warmup=(backend == "xla"))) as svc:
+        results = [None] * len(ctxs)
+
+        def client(i):
+            results[i] = svc.decide(ctxs[i])
+        threads = [threading.Thread(target=client, args=(i,))
+                   for i in range(len(ctxs))]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+    assert results == expected
+
+
+def test_goal_override_matches_direct_scoring():
+    """A per-request goal override reweights the prediction exactly as
+    the jitted single-decision scorer does with that goal."""
+    agent = small_agent()
+    ctxs = harvest_contexts(agent, n_envs=4)
+    override = np.asarray([0.9, 0.1], np.float32)
+    with DecisionService(agent, ServeConfig(max_batch=4)) as svc:
+        got = [svc.decide(c, goal=override) for c in ctxs]
+        with pytest.raises(ValueError, match="goal override"):
+            svc.decide(ctxs[0], goal=np.ones(3, np.float32))
+    from repro.core.encoding import encode_measurement, encode_state
+    import jax.numpy as jnp
+    expected = []
+    for c in ctxs:
+        mask = np.zeros(agent.config.window, bool)
+        mask[:min(len(c.window), agent.config.window)] = True
+        expected.append(int(greedy_action(
+            agent.params, agent.dfp,
+            jnp.asarray(encode_state(agent.enc, c)),
+            jnp.asarray(encode_measurement(agent.enc, c)),
+            jnp.asarray(override), jnp.asarray(mask))))
+    assert got == expected
+
+
+# ---------------------------------------------------------------- replay
+def test_service_replay_bit_identical_to_direct():
+    """Acceptance: service-routed replay == direct Simulator replay."""
+    agent = small_agent()
+    jobs = synth_jobs(3)
+    direct = run_trace(RES, jobs, agent)
+    with DecisionService(agent, ServeConfig(max_batch=8)) as svc:
+        served = ServiceSim(svc, RES).run_trace(jobs)
+    assert_results_equal(served, direct)
+
+
+def test_service_vector_replay_bit_identical():
+    """Lockstep replay through the service (decide_many coalescing whole
+    rounds) matches the direct batched rollout."""
+    agent = small_agent()
+    jobsets = [synth_jobs(seed) for seed in range(4)]
+    direct = run_traces(RES, jobsets, agent)
+    with DecisionService(agent, ServeConfig(max_batch=8)) as svc:
+        served = ServiceSim(svc, RES).run_traces(jobsets)
+    for a, b in zip(served, direct):
+        assert_results_equal(a, b)
+
+
+def test_service_scenario_replay_matches_direct():
+    """Registry-scenario replay through the service produces identical
+    ScheduleMetrics to the direct simulator run (acceptance criterion)."""
+    from repro.workloads import ThetaConfig, build_jobs
+    cfg = ThetaConfig.mini(seed=0, duration_days=0.3, jobs_per_day=120)
+    res = cfg.resources()
+    agent = MRSchAgent(res, AgentConfig(state_hidden=(32, 16), state_out=8,
+                                        module_hidden=4))
+    jobs = build_jobs("S1", cfg, seed=1)
+    direct = run_trace(res, jobs, agent)
+    with DecisionService(agent, ServeConfig(max_batch=8)) as svc:
+        served = ServiceSim(svc, res).run_scenario("S1", cfg, seed=1)
+    assert_results_equal(served, direct)
+
+
+def test_service_sim_tracks_latency():
+    agent = small_agent()
+    with DecisionService(agent, ServeConfig(max_batch=4)) as svc:
+        ssim = ServiceSim(svc, RES, track_latency=True)
+        result = ssim.run_trace(synth_jobs(1, n=15))
+    assert len(ssim.latencies_s) == result.decisions
+    assert all(t > 0 for t in ssim.latencies_s)
+
+
+def test_sim_config_validation():
+    with pytest.raises(ValueError, match="window"):
+        sim_config(window=0)
+    with pytest.raises(ValueError, match="max_events"):
+        sim_config(max_events=0)
+    cfg = sim_config(window=5, backfill=False, max_events=10)
+    assert (cfg.window, cfg.backfill, cfg.max_events) == (5, False, 10)
+
+
+# ---------------------------------------------------------------- hot reload
+def test_hot_reload_mid_stream(tmp_path):
+    """Requests answered before the swap see the old params, requests
+    after see the new ones, and none are dropped or corrupted."""
+    agent_a = small_agent(seed=0)
+    agent_b = small_agent(seed=13)
+    ctxs = harvest_contexts(agent_a)
+    expected_a = [agent_a.select(c) for c in ctxs]
+    expected_b = [agent_b.select(c) for c in ctxs]
+    assert expected_a != expected_b           # the swap is observable
+    mgr = CheckpointManager(str(tmp_path))
+    with DecisionService(agent_a, ServeConfig(max_batch=8)) as svc:
+        watcher = CheckpointWatcher(svc, str(tmp_path))
+        before = [svc.decide(c) for c in ctxs]
+        mgr.save(agent_b.params, step=5)
+        assert watcher.check_once() == 5
+        assert svc.params_step == 5
+        after = [svc.decide(c) for c in ctxs]
+    assert before == expected_a
+    assert after == expected_b
+    assert svc.stats()["reloads"] == 1
+
+
+def test_hot_reload_with_concurrent_clients(tmp_path):
+    """Params swap while clients are submitting: every answer is the
+    correct greedy action under either the old or the new params, and
+    every request is answered exactly once."""
+    agent_a = small_agent(seed=0)
+    agent_b = small_agent(seed=13)
+    ctxs = harvest_contexts(agent_a)
+    expected_a = [agent_a.select(c) for c in ctxs]
+    expected_b = [agent_b.select(c) for c in ctxs]
+    rounds = 30
+    with DecisionService(agent_a, ServeConfig(max_batch=8)) as svc:
+        results = [[None] * rounds for _ in ctxs]
+        finals = [None] * len(ctxs)
+        swapped = threading.Event()
+
+        def client(i):
+            for r in range(rounds):       # overlaps the swap below
+                results[i][r] = svc.decide(ctxs[i])
+            swapped.wait()                # then one strictly-post-swap round
+            finals[i] = svc.decide(ctxs[i])
+        threads = [threading.Thread(target=client, args=(i,))
+                   for i in range(len(ctxs))]
+        for t in threads:
+            t.start()
+        svc.update_params(agent_b.params, step=1)
+        swapped.set()
+        for t in threads:
+            t.join()
+    for i in range(len(ctxs)):
+        valid = {expected_a[i], expected_b[i]}
+        assert all(r in valid for r in results[i])
+        assert finals[i] == expected_b[i]     # post-swap settles on B
+
+
+def test_update_params_rejects_incompatible_tree():
+    agent = small_agent()
+    wrong_width = MRSchAgent(RES, AgentConfig(
+        state_hidden=(16, 8), state_out=8, module_hidden=4))
+    ctxs = harvest_contexts(agent, n_envs=4)
+    expected = [agent.select(c) for c in ctxs]
+    with DecisionService(agent, ServeConfig(max_batch=4)) as svc:
+        with pytest.raises(ValueError, match="shape mismatch"):
+            svc.update_params(wrong_width.params)
+        with pytest.raises(ValueError, match="tree structure"):
+            svc.update_params({"not": "a param tree"})
+        # the failed swaps left the service serving the original params
+        assert [svc.decide(c) for c in ctxs] == expected
+    assert svc.stats()["reloads"] == 0
+
+
+def test_watcher_skips_stale_and_rejects_foreign(tmp_path):
+    agent = small_agent()
+    other = small_agent(seed=3)
+    wrong = MRSchAgent(RES, AgentConfig(state_hidden=(16, 8), state_out=8,
+                                        module_hidden=4))
+    mgr = CheckpointManager(str(tmp_path), keep=5)
+    with DecisionService(agent, ServeConfig(max_batch=4,
+                                            warmup=False)) as svc:
+        watcher = CheckpointWatcher(svc, str(tmp_path))
+        assert watcher.check_once() is None   # empty directory
+        mgr.save(agent.params, step=1)
+        mgr.save(other.params, step=2)
+        assert watcher.check_once() == 2      # straight to the newest
+        assert watcher.check_once() is None   # already current
+        mgr.save(wrong.params, step=3)        # foreign architecture
+        assert watcher.check_once() is None
+        st = watcher.stats()
+        assert st["rejected"] == 1
+        assert st["loaded_step"] == 3         # not retried until newer
+        mgr.save(other.params, step=4)
+        assert watcher.check_once() == 4      # recovers on the next good one
+    assert svc.stats()["reloads"] == 2
+
+
+def test_watcher_survives_stray_directory_entries(tmp_path):
+    """A non-checkpoint step_* entry (operator's backup copy) must
+    neither kill the watcher nor mask real checkpoints behind it."""
+    agent = small_agent()
+    other = small_agent(seed=3)
+    (tmp_path / "step_backup").mkdir()        # int("backup") would raise
+    with DecisionService(agent, ServeConfig(max_batch=4,
+                                            warmup=False)) as svc:
+        watcher = CheckpointWatcher(svc, str(tmp_path))
+        assert watcher.check_once() is None   # stray entry alone: no-op
+        CheckpointManager(str(tmp_path)).save(other.params, step=7)
+        assert watcher.check_once() == 7      # real checkpoint still found
+    assert svc.params_step == 7
+
+
+def test_decide_many_rejects_mismatched_goals():
+    agent = small_agent()
+    ctxs = harvest_contexts(agent, n_envs=4)
+    with DecisionService(agent, ServeConfig(max_batch=4)) as svc:
+        with pytest.raises(ValueError, match="decide_many"):
+            svc.decide_many(ctxs, goals=[None] * (len(ctxs) - 1))
