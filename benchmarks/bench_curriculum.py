@@ -95,6 +95,105 @@ def vector_training(quick: bool = True, seed: int = 0, n_envs: int = 8,
     return out
 
 
+def device_rollout(quick: bool = True, seed: int = 0, n_envs: int = 512,
+                   backend: str | None = None):
+    """Device-resident vs host-lockstep rollout throughput at N envs.
+
+    Both arms collect training trajectories from the SAME jobset grid
+    with the SAME agent: the host arm through ``VectorSimulator`` in
+    training mode (slot-aware ``select_batch`` — per-decision row
+    encoding, exploration draws, and episode recording on the host, a
+    Python round trip every lockstep round), the device arm through
+    ``DeviceSimulator`` in collection mode (in-graph epsilon-greedy +
+    packed decision-row capture) — the whole rollout is one jitted
+    program, so the only host work is ingesting the packed trace.
+
+    The workload is a small contended cluster (16 nodes / 8 BB units,
+    ~43 jobs per trace): short traces keep the device program
+    dispatch-bound rather than size-bound, which is where widening N is
+    nearly free on device while the host arm pays per decision — the
+    regime a curriculum training loop (many short episodes, wide batch)
+    actually runs in.  Each arm re-runs its full per-epoch cost: the
+    host engine rebuilds its simulators every pass, the device engine
+    re-rolls from the packed arrays.  Compile time is reported
+    separately; the throughput rows time the warm program (best of a few
+    repeats, since the wall clock is scheduler-noisy), which is what a
+    training loop amortizes to.
+    """
+    from dataclasses import replace as dc_replace
+
+    from repro.sim import DeviceSimulator, SimConfig, VectorSimulator
+
+    agent_cfg = THROUGHPUT_AGENT if backend is None else \
+        dc_replace(THROUGHPUT_AGENT, backend=backend)
+    cfg = ThetaConfig(n_nodes=16, bb_units=8, duration_days=0.15,
+                      jobs_per_day=600, seed=seed,
+                      runtime_median_s=30 * 60.0, runtime_max_s=6 * 3600.0)
+    res = cfg.resources()
+    scenarios = ("S1", "S2", "S3", "S4")
+    seeds = tuple(range(1, 1 + max(1, n_envs // len(scenarios))))
+    tasks = build_sweep(cfg, scenarios=scenarios, seeds=seeds)[:n_envs]
+    jobsets = [jobs for _, jobs in tasks]
+    agent = MRSchAgent(res, agent_cfg)
+
+    def vec_arm():
+        agent.training = True
+        agent.begin_vector_episodes(len(jobsets))
+        try:
+            vec = VectorSimulator.from_jobsets(
+                res, jobsets, agent, SimConfig.for_engine("vector"))
+            vec.run()
+        finally:
+            agent.training = False
+        return vec.stats.decisions
+
+    def dev_arm(dev):
+        ro = dev.rollout(eps=0.1, seed=seed, collect=True)
+        return ro.stats.decisions
+
+    import time as _time
+
+    vec_reps, dev_reps = (2, 3) if quick else (3, 5)
+    vec_arm()                                     # warm the batched forward
+    vec_wall = float("inf")
+    for _ in range(vec_reps):
+        t0 = _time.perf_counter()
+        vec_decisions = vec_arm()
+        vec_wall = min(vec_wall, _time.perf_counter() - t0)
+
+    dev = DeviceSimulator(res, jobsets, agent, SimConfig.for_engine("device"))
+    t0 = _time.perf_counter()
+    dev_arm(dev)                                  # compile + first run
+    compile_wall = _time.perf_counter() - t0
+    dev_wall = float("inf")
+    for _ in range(dev_reps):
+        t0 = _time.perf_counter()
+        dev_decisions = dev_arm(dev)
+        dev_wall = min(dev_wall, _time.perf_counter() - t0)
+
+    vec_per_sec = vec_decisions / max(vec_wall, 1e-9)
+    dev_per_sec = dev_decisions / max(dev_wall, 1e-9)
+    out = {
+        "n_envs": n_envs,
+        "backend": backend or "xla",
+        "n_jobs": sum(len(js) for js in jobsets),
+        "vector": {
+            "decisions": vec_decisions,
+            "wall_seconds": round(vec_wall, 4),
+            "decisions_per_sec": round(vec_per_sec, 1),
+        },
+        "device": {
+            "decisions": dev_decisions,
+            "wall_seconds": round(dev_wall, 4),
+            "compile_seconds": round(compile_wall, 3),
+            "decisions_per_sec": round(dev_per_sec, 1),
+        },
+        "speedup": round(dev_per_sec / max(vec_per_sec, 1e-9), 2),
+    }
+    save_json("device_rollout", out)
+    return out
+
+
 def run(quick: bool = True, seed: int = 0, backend: str | None = None):
     train_cfg, res = mini_setup(seed=seed + 1, duration_days=3.0)
     trace = build_scenarios(train_cfg, names=("S2",))["S2"]
@@ -123,7 +222,17 @@ if __name__ == "__main__":
                     help="NN backend for the training-throughput arms")
     ap.add_argument("--throughput-only", action="store_true",
                     help="skip the Fig. 4 ordering ablation")
+    ap.add_argument("--device-rollout", action="store_true",
+                    help="only the device-vs-vector rollout throughput cell")
     args = ap.parse_args()
+    if args.device_rollout:
+        dr = device_rollout(quick=not args.full, backend=args.backend)
+        print(f"device rollout [N={dr['n_envs']}, {dr['backend']}]: "
+              f"vec={dr['vector']['decisions_per_sec']}/s "
+              f"dev={dr['device']['decisions_per_sec']}/s "
+              f"(compile {dr['device']['compile_seconds']}s) "
+              f"speedup={dr['speedup']}x")
+        raise SystemExit(0)
     if args.throughput_only:
         o = {"vector_training": vector_training(quick=not args.full,
                                                 backend=args.backend)}

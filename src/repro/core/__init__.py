@@ -7,6 +7,7 @@ from .encoding import (EncodingConfig, decision_row_dim, encode_decision_row,
                        pad_decision_rows)
 from .goal import ctx_goal, goal_vector
 from .policies import FCFSPolicy, GAConfig, GAOptimizer, ScalarRLConfig, ScalarRLPolicy
+from .policy_api import Policy, WindowPolicy, supports_batch, supports_device
 from .replay import Episode, EpisodeRecorder, ReplayBuffer, VectorEpisodeRecorder
 from .train import (EnvSlot, TrainConfig, TrainLog, evaluate,
                     slots_from_jobsets, train_agent, train_agent_vectorized)
@@ -15,7 +16,9 @@ __all__ = [
     "AgentConfig", "MRSchAgent", "DFPConfig", "action_values", "greedy_action",
     "greedy_actions_packed", "init_params", "loss_fn", "predict", "EncodingConfig", "encode_measurement",
     "encode_state", "encoding_for", "decision_row_dim", "encode_decision_row",
-    "pad_decision_rows", "ctx_goal", "goal_vector", "FCFSPolicy", "GAConfig",
+    "pad_decision_rows", "ctx_goal", "goal_vector",
+    "Policy", "WindowPolicy", "supports_batch", "supports_device",
+    "FCFSPolicy", "GAConfig",
     "GAOptimizer", "ScalarRLConfig", "ScalarRLPolicy", "Episode",
     "EpisodeRecorder", "ReplayBuffer", "VectorEpisodeRecorder",
     "EnvSlot", "TrainConfig", "TrainLog", "evaluate", "slots_from_jobsets",

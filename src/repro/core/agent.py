@@ -131,6 +131,28 @@ class MRSchAgent:
         self.dfp = replace(self.dfp, backend=resolve_backend(backend))
         self.config = replace(self.config, backend=backend)
 
+    # ------------------------------------------------------ Policy protocol
+    # Device-side stages (repro.core.policy_api): the jitted rollout
+    # engine threads ``init_state()`` through its scan and calls
+    # ``score_window`` in-graph; the host stages below (``select`` /
+    # ``select_batch``) are unchanged, so external callers keep working.
+    requires_obs = True
+
+    def init_state(self):
+        """Policy-state pytree for the device rollout (the parameters)."""
+        return self.params
+
+    def score_window(self, params, obs) -> jnp.ndarray:
+        """Action values from packed decision rows (pure, traceable).
+
+        ``obs`` rows follow ``encoding.encode_decision_row``; the valid
+        mask is applied by the engine, not here.  A one-row batch is
+        numerically identical to the sequential ``_values`` scorer.
+        """
+        sd, m = self.enc.state_dim, self.enc.n_resources
+        return action_values(params, self.dfp, obs[..., :sd],
+                             obs[..., sd:sd + m], obs[..., sd + m:sd + 2 * m])
+
     # ---------------------------------------------------------------- policy
     def _ctx_goal(self, ctx: SchedContext) -> np.ndarray:
         """Eq. (1) goal for this context (shared with the serving layer)."""

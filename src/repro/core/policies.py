@@ -27,17 +27,27 @@ from ..nn.optim import adam_init, adam_update
 from ..sim.cluster import ResourceSpec
 from ..sim.simulator import SchedContext
 from .encoding import EncodingConfig, encode_measurement, encode_state
+from .policy_api import WindowPolicy
 
 
-class FCFSPolicy:
-    """Head-of-queue list scheduling."""
+class FCFSPolicy(WindowPolicy):
+    """Head-of-queue list scheduling.
+
+    Expressed through the ``Policy`` protocol as a static slot
+    preference: earlier window slots score higher, so the masked argmax
+    always lands on the head.  The batched and device stages come from
+    ``WindowPolicy``/``score_window``; ``select`` keeps the trivial host
+    fast path (identical result, no array round trip per decision).
+    """
+
+    requires_obs = False      # scores need only the window-valid mask
 
     def select(self, ctx: SchedContext) -> int:
         return 0
 
-    def select_batch(self, ctxs: Sequence[SchedContext]) -> np.ndarray:
-        """Batched adapter for ``VectorSimulator`` (always the head)."""
-        return np.zeros(len(ctxs), dtype=np.int32)
+    def score_window(self, policy_state, obs) -> jnp.ndarray:
+        return -jnp.broadcast_to(
+            jnp.arange(obs.shape[-1], dtype=jnp.float32), obs.shape)
 
 
 # --------------------------------------------------------------------- GA
@@ -67,6 +77,13 @@ class GAOptimizer:
     GA through its sequential per-environment fallback with one instance
     per environment (``VectorSimulator.from_factory``).
     """
+
+    # Host-only stages of the Policy protocol: the evolving plan cache
+    # cannot be expressed as a pure traced function, so every engine
+    # must drive GA through its sequential ``select`` stage
+    # (``policy_api.supports_device`` reports False).
+    init_state = None
+    score_window = None
 
     def __init__(self, config: GAConfig = GAConfig()):
         self.config = config
@@ -192,8 +209,17 @@ def _pg_step(params, opt_state, batch, sizes, lr, entropy_coef):
     return params, opt_state, l
 
 
-class ScalarRLPolicy:
-    """REINFORCE over window slots with a fixed-weight scalar reward."""
+class ScalarRLPolicy(WindowPolicy):
+    """REINFORCE over window slots with a fixed-weight scalar reward.
+
+    Evaluation batching and the device stage both come from the
+    ``Policy`` protocol: ``score_window`` is one masked-logits forward,
+    consumed by ``WindowPolicy.select_batch`` on the host and by the
+    device rollout engine in-graph.  Training stays on the sequential
+    ``select`` path — the REINFORCE episode buffers assume one
+    contiguous trajectory, and ``WindowPolicy`` enforces that by
+    refusing batched selection while ``training`` is set.
+    """
 
     def __init__(self, resources: Sequence[ResourceSpec],
                  config: ScalarRLConfig = ScalarRLConfig()):
@@ -236,26 +262,19 @@ class ScalarRLPolicy:
             action = int(np.argmax(logits))
         return action
 
-    def select_batch(self, ctxs: Sequence[SchedContext]) -> np.ndarray:
-        """Greedy actions for N contexts with one batched forward.
+    # ------------------------------------------------- Policy protocol
+    def init_state(self):
+        return self.params
 
-        Evaluation-only adapter for ``VectorSimulator`` (the evaluation
-        matrix fans ScalarRL over the lockstep engine with it).  Training
-        stays on the sequential ``select`` path: the REINFORCE episode
-        buffers assume one contiguous trajectory.
-        """
-        if self.training:
-            raise RuntimeError(
-                "ScalarRLPolicy.select_batch is evaluation-only: training "
-                "accumulates a single contiguous episode — run training "
-                "through Simulator.run per trace")
-        states = np.stack([encode_state(self.enc, c) for c in ctxs])
-        mask = np.zeros((len(ctxs), self.config.window), bool)
-        for i, c in enumerate(ctxs):
-            mask[i, :min(len(c.window), self.config.window)] = True
-        logits = np.array(mlp_apply(self.params, jnp.asarray(states)))
-        logits[~mask] = -1e9
-        return np.argmax(logits, axis=1).astype(np.int32)
+    def score_window(self, policy_state, obs) -> jnp.ndarray:
+        """Logits from the state section of the packed row (pure)."""
+        return mlp_apply(policy_state, obs[..., : self.enc.state_dim])
+
+    def _encode_rows(self, ctxs: Sequence[SchedContext],
+                     n_actions: int) -> np.ndarray:
+        # Only the state section feeds the logits; skip the
+        # measurement/goal encoding the full decision row would pay for.
+        return np.stack([encode_state(self.enc, c) for c in ctxs])
 
     def end_episode(self) -> Optional[float]:
         if not self.training or len(self._actions) < 2:

@@ -7,9 +7,10 @@ for the Table III families, the new registry scenarios, and the §V-D
 drift workloads alike — and emits it in a *stable* JSON/CSV schema so CI
 can diff runs against committed baselines (``tools/check_bench.py``).
 
-Policies whose instances expose ``select_batch`` (MRSch, FCFS, ScalarRL)
-are fanned over ``VectorSimulator`` so every lockstep round costs one
-batched forward; stateful sequential policies (GA) run through
+Policies are probed through the ``repro.core.policy_api`` helpers:
+``supports_batch`` instances (MRSch, FCFS, ScalarRL) are fanned over
+``VectorSimulator`` so every lockstep round costs one batched forward;
+stateful sequential policies (GA) run through
 ``VectorSimulator.from_factory`` with one fresh instance per environment.
 
 Schema stability contract (``MATRIX_SCHEMA`` bumps on change):
@@ -31,8 +32,9 @@ import numpy as np
 
 from ..core.policies import (FCFSPolicy, GAConfig, GAOptimizer,
                              ScalarRLConfig, ScalarRLPolicy)
+from ..core.policy_api import supports_batch
 from ..sim.cluster import ResourceSpec
-from ..sim.simulator import SimResult, sim_config
+from ..sim.simulator import SimConfig, SimResult
 from ..sim.vector import VectorSimulator
 from ..workloads.registry import build_jobs, get_scenario
 from ..workloads.theta import ThetaConfig
@@ -135,12 +137,13 @@ def run_matrix(policies: Mapping[str, PolicyFactory],
                                     for seed in cfg.seeds]
     traces = {cell: build_jobs(cell[0], theta, seed=cell[1])
               for cell in cells}
-    sim_cfg = sim_config(window=cfg.window, backfill=cfg.backfill)
+    sim_cfg = SimConfig.for_engine("vector", window=cfg.window,
+                                   backfill=cfg.backfill)
     rows: List[Dict] = []
     batched_policies = 0
     for name, factory in policies.items():
         probe = factory()
-        batched = hasattr(probe, "select_batch")
+        batched = supports_batch(probe)
         batched_policies += bool(batched)
         # Batched policies share the probe instance, so eval mode is
         # toggled here; factory-path instances are wrapped per env by

@@ -1,0 +1,65 @@
+"""Pallas TPU kernel: pack the first W waiting jobs into a dense window.
+
+One grid step per environment row.  The selection is expressed as a
+one-hot matrix ``sel[w, j] = waiting_j AND (cumsum(waiting)_j == w+1)``
+so the gather becomes a single (W, J) @ (J, F) MXU matmul instead of a
+serial scan over the job axis — the same trick lands the window indices
+(contract against an iota) and the validity mask (row-sum of ``sel``).
+
+Shapes are padded to tile multiples by the ``ops`` wrapper: J and F to
+lane multiples (128), W to a sublane multiple (8).  All blocks live in
+VMEM; no scratch is needed since each environment is one grid step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _window_pack_kernel(waiting_ref, feats_ref, wf_ref, wi_ref, wv_ref):
+    waiting = waiting_ref[...]                     # (1, J)
+    W = wf_ref.shape[1]
+    J = waiting.shape[1]
+    is_wait = waiting > 0.5
+    csum = jnp.cumsum(waiting, axis=1)             # f32 exact for J < 2**24
+    slot = jax.lax.broadcasted_iota(jnp.float32, (W, J), 0)
+    sel = jnp.where(is_wait & (csum == slot + 1.0), 1.0, 0.0)   # (W, J)
+    wf_ref[...] = jnp.dot(sel, feats_ref[0],
+                          preferred_element_type=jnp.float32)[None]
+    jidx = jax.lax.broadcasted_iota(jnp.float32, (W, J), 1)
+    wi_ref[...] = (sel * jidx).sum(axis=1).astype(jnp.int32)[None]
+    wv_ref[...] = sel.sum(axis=1)[None]
+
+
+def window_pack_kernel(waiting: jnp.ndarray, feats: jnp.ndarray, *,
+                       window: int, interpret: bool = False):
+    """waiting (N, J) f32 0/1, feats (N, J, F) f32 ->
+    (win_feats (N, W, F) f32, win_idx (N, W) i32, win_valid (N, W) f32).
+
+    J, F and ``window`` must already be tile-aligned (``ops`` pads)."""
+    N, J = waiting.shape
+    F = feats.shape[2]
+    W = window
+    assert J % 128 == 0 and F % 128 == 0 and W % 8 == 0, (J, F, W)
+    return pl.pallas_call(
+        _window_pack_kernel,
+        grid=(N,),
+        in_specs=[
+            pl.BlockSpec((1, J), lambda i: (i, 0)),
+            pl.BlockSpec((1, J, F), lambda i: (i, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, W, F), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, W), lambda i: (i, 0)),
+            pl.BlockSpec((1, W), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((N, W, F), jnp.float32),
+            jax.ShapeDtypeStruct((N, W), jnp.int32),
+            jax.ShapeDtypeStruct((N, W), jnp.float32),
+        ],
+        interpret=interpret,
+    )(waiting, feats)

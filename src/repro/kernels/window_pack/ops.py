@@ -1,0 +1,52 @@
+"""Public wrapper for the window pack/select op.
+
+``pack_window`` pads (J, F, W) to tile multiples, dispatches to the
+Pallas kernel on TPU (or when forced), and slices the results back.  Off
+TPU it defaults to the vectorized XLA reference — the op sits inside the
+device rollout engine's scan, and interpret-mode Pallas would execute
+the kernel body in Python on every round; the kernel path is still
+exercised off-TPU by the parity tests via ``use_pallas=True,
+interpret=True``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import window_pack_kernel
+from .ref import pack_window_reference
+
+
+def _pad_axis(x, mult, axis):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def pack_window(waiting: jnp.ndarray, feats: jnp.ndarray, *, window: int,
+                use_pallas: bool | None = None,
+                interpret: bool | None = None):
+    """First ``window`` waiting jobs per environment, densely packed.
+
+    waiting (N, J) 0/1 float, feats (N, J, F) float32 ->
+    (win_feats (N, W, F) f32, win_idx (N, W) i32, win_valid (N, W) bool).
+    Traceable (safe inside jit); padding/slicing is shape-static.
+    """
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if not use_pallas:
+        return pack_window_reference(waiting, feats, window=window)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    N, J = waiting.shape
+    F = feats.shape[2]
+    wp = _pad_axis(waiting.astype(jnp.float32), 128, 1)
+    fp = _pad_axis(_pad_axis(feats.astype(jnp.float32), 128, 1), 128, 2)
+    Wp = window + ((-window) % 8)
+    wf, wi, wv = window_pack_kernel(wp, fp, window=Wp,
+                                    interpret=bool(interpret))
+    return (wf[:, :window, :F], wi[:, :window],
+            wv[:, :window] > 0.5)

@@ -1,0 +1,34 @@
+"""Pure-JAX reference for the window pack/select op.
+
+Given per-environment waiting masks over a padded job axis, gather the
+first ``W`` waiting jobs (queue order == ascending job index; the device
+engine keeps traces sorted by submit time) into a dense window: their
+feature rows, their job indices, and a validity mask.  This is the inner
+candidate-enumeration step of every scheduling decision — the Pallas
+kernel in ``kernel.py`` computes the same one-hot formulation with one
+MXU matmul per environment row.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pack_window_reference(waiting: jnp.ndarray, feats: jnp.ndarray, *,
+                          window: int):
+    """waiting (N, J) 0/1, feats (N, J, F) ->
+    (win_feats (N, W, F), win_idx (N, W) int32, win_valid (N, W) bool).
+
+    Slot ``w`` holds the (w+1)-th waiting job in index order; slots past
+    the number of waiting jobs are invalid with zero features and index 0.
+    """
+    J = waiting.shape[1]
+    is_wait = waiting > 0.5
+    csum = jnp.cumsum(is_wait.astype(jnp.int32), axis=1)        # (N, J)
+    slots = jnp.arange(window, dtype=jnp.int32)[None, :, None]  # (1, W, 1)
+    sel = is_wait[:, None, :] & (csum[:, None, :] == slots + 1)  # (N, W, J)
+    sel_f = sel.astype(feats.dtype)
+    win_feats = jnp.einsum("nwj,njf->nwf", sel_f, feats)
+    jidx = jnp.arange(J, dtype=jnp.int32)[None, None, :]
+    win_idx = (sel * jidx).sum(axis=-1).astype(jnp.int32)
+    win_valid = sel.any(axis=-1)
+    return win_feats, win_idx, win_valid

@@ -10,9 +10,10 @@ forward the agent uses, so a service-routed replay produces
 the same trace (pinned in ``tests/test_serve.py``): the serving layer
 adds concurrency and batching, never different decisions.
 
-``ServiceSim`` bundles the cluster spec + the shared ``sim_config``
-plumbing (the same helper the sweep/drift/matrix harnesses use) into
-one replay entry point for traces and registry scenarios.
+``ServiceSim`` bundles the cluster spec + the shared
+``SimConfig.for_engine`` plumbing (the same constructor the
+sweep/drift/matrix harnesses use) into one replay entry point for
+traces and registry scenarios.
 """
 from __future__ import annotations
 
@@ -23,7 +24,7 @@ import numpy as np
 
 from ..sim.cluster import ResourceSpec
 from ..sim.job import Job
-from ..sim.simulator import SchedContext, SimResult, Simulator, sim_config
+from ..sim.simulator import SchedContext, SimConfig, SimResult, Simulator
 from ..sim.vector import VectorSimulator
 from .service import DecisionService
 
@@ -31,11 +32,20 @@ from .service import DecisionService
 class ServicePolicy:
     """Route a scheduling policy's decisions through a DecisionService.
 
+    A ``repro.core.Policy`` whose device-resident stages are absent
+    (``init_state``/``score_window`` are ``None``): decisions go through
+    a live service, so only the host engines can drive it —
+    ``supports_device`` is False by construction and ``DeviceSimulator``
+    rejects it with a clear error instead of tracing a network hop.
+
     With ``track_latency=True`` every ``select`` records its end-to-end
     request latency (seconds) into ``latencies_s`` — the example/bench
     histogram source.  ``select_batch`` submits the whole group before
     waiting, so a lockstep round's requests coalesce in the batcher.
     """
+
+    init_state = None
+    score_window = None
 
     def __init__(self, service: DecisionService, track_latency: bool = False):
         self.service = service
@@ -67,7 +77,8 @@ class ServiceSim:
                  backfill: bool = True, track_latency: bool = False):
         self.service = service
         self.resources = list(resources)
-        self.sim_cfg = sim_config(window=window, backfill=backfill)
+        self.sim_cfg = SimConfig.for_engine("vector", window=window,
+                                            backfill=backfill)
         self.policy = ServicePolicy(service, track_latency=track_latency)
 
     def run_trace(self, jobs: Sequence[Job]) -> SimResult:

@@ -1,14 +1,17 @@
 from .cluster import Cluster, ResourceSpec
+from .device import (DeviceRollout, DeviceSimulator, DeviceStats,
+                     run_traces_device)
 from .job import Job
 from .metrics import MetricsAccumulator, ScheduleMetrics
-from .simulator import (SchedContext, SimConfig, SimResult, Simulator,
-                        run_trace, sim_config)
+from .simulator import (ENGINES, SchedContext, SimConfig, SimResult,
+                        Simulator, run_trace, sim_config)
 from .vector import (BatchSchedulingPolicy, VectorSimulator, VectorStats,
                      run_traces)
 
 __all__ = [
     "Cluster", "ResourceSpec", "Job", "MetricsAccumulator", "ScheduleMetrics",
-    "SchedContext", "SimConfig", "SimResult", "Simulator", "run_trace",
-    "sim_config",
+    "ENGINES", "SchedContext", "SimConfig", "SimResult", "Simulator",
+    "run_trace", "sim_config",
     "BatchSchedulingPolicy", "VectorSimulator", "VectorStats", "run_traces",
+    "DeviceRollout", "DeviceSimulator", "DeviceStats", "run_traces_device",
 ]

@@ -1,0 +1,699 @@
+"""Device-resident rollout engine: the whole simulation loop in one jit.
+
+``DeviceSimulator`` runs N independent trace simulations as ONE device
+program: a ``lax.scan`` over scheduling rounds whose body advances job
+arrival/completion events (one coalesced-timestamp pop per round, which
+the ``3J + 2`` round budget covers), packs the
+first-W waiting jobs per environment (``repro.kernels.window_pack``),
+builds the packed decision rows in-graph, scores them with the policy's
+pure ``score_window`` stage (``repro.core.policy_api``), and applies the
+selected action — immediate start with first-free unit allocation, or a
+reservation with EASY-backfill shadow accounting.  The host engines pay
+a Python round trip per scheduling round; here the only host work is
+packing the traces up front and summarizing metrics at the end.
+
+State layout (leading axis = environment):
+
+* job arrays ``(N, J)`` — submit/runtime/walltime (f32, padded jobs
+  carry ``submit = +inf`` so they never arrive) and demands ``(N, J, R)``
+  (f32 unit counts; exact below 2**24);
+* ``n_arrived`` pointers — traces are sorted by (submit, jid), so the
+  waiting queue in arrival order is exactly "arrived and not started in
+  ascending job index", which is what the window-pack kernel assumes;
+* per-unit cluster state ``(N, U)`` with ``U = sum(capacities)`` —
+  ``release`` (estimated release time, 0 = free, mirroring
+  ``Cluster.release``) and ``owner`` (job index, -1 free), in fixed
+  per-resource segments;
+* scalars per env — ``now``, ``in_pass``, ``done``, ``decisions``.
+
+Semantics mirror ``Simulator`` event for event (coalesced timestamps,
+scheduling-pass continuation, first-free unit allocation, reservation at
+the earliest fit time, shadow-debit backfill in queue order), so an
+N=1 rollout reproduces the sequential engine round for round; times are
+float32 on device, so derived metrics agree to float32 precision
+(pinned in ``tests/test_device.py``).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels.window_pack.ops import pack_window
+from .cluster import Cluster, ResourceSpec
+from .job import Job
+from .metrics import MetricsAccumulator
+from .simulator import SimConfig, SimResult
+
+INF = jnp.float32(jnp.inf)
+
+
+@dataclass(frozen=True)
+class DeviceLayout:
+    """Static shape/semantic configuration baked into the jitted rollout."""
+    names: Tuple[str, ...]
+    caps: Tuple[int, ...]            # actual cluster capacities
+    enc_caps: Tuple[int, ...]        # encoding section sizes (reference caps)
+    window: int
+    n_envs: int
+    n_jobs: int                      # J, padded job axis
+    rounds: int                      # T, scan length
+    backfill: bool
+    requires_obs: bool
+    time_scale: float
+
+    @property
+    def n_resources(self) -> int:
+        return len(self.names)
+
+    @property
+    def segments(self) -> Tuple[Tuple[int, int], ...]:
+        """(offset, capacity) per resource into the packed unit axis."""
+        segs, off = [], 0
+        for c in self.caps:
+            segs.append((off, c))
+            off += c
+        return tuple(segs)
+
+    @property
+    def n_units(self) -> int:
+        return int(sum(self.caps))
+
+    @property
+    def state_dim(self) -> int:
+        return self.window * (self.n_resources + 2) + 2 * int(sum(self.enc_caps))
+
+
+@dataclass
+class DeviceStats:
+    """Mirror of ``VectorStats`` for the device engine."""
+    rounds: int = 0
+    decisions: int = 0
+    policy_calls: int = 0            # one in-graph score per active round
+    max_batch: int = 0
+
+    def as_dict(self) -> dict:
+        return {"rounds": self.rounds, "decisions": self.decisions,
+                "policy_calls": self.policy_calls,
+                "max_batch": self.max_batch}
+
+
+@dataclass
+class DeviceRollout:
+    """One device rollout: per-env results plus the decision trace.
+
+    ``results`` materializes lazily on first access: rebuilding per-job
+    Python objects for every environment is host-side work that
+    collection-mode consumers (which ingest the packed decision trace,
+    not ``SimResult``s) should not pay inside the rollout hot path.
+    """
+    actions: np.ndarray              # (T, N) int32, -1 where no decision
+    decided: np.ndarray              # (T, N) bool
+    stats: DeviceStats
+    obs: Optional[np.ndarray] = None  # (T, N, row_dim) packed decision rows
+    _build: Optional[Callable[[], List[SimResult]]] = field(
+        default=None, repr=False)
+    _cache: Optional[List[SimResult]] = field(default=None, repr=False)
+
+    @property
+    def results(self) -> List[SimResult]:
+        """Per-env ``SimResult``s in jobset order (built on demand)."""
+        if self._cache is None:
+            self._cache = self._build()
+        return self._cache
+
+    def transitions(self):
+        """Yield (round, env, obs_row, action) for every decision taken,
+        in round order — the order the host trainer must ingest them to
+        keep each environment's trajectory contiguous."""
+        assert self.obs is not None, "rollout was not collected"
+        for t in range(self.decided.shape[0]):
+            for i in np.flatnonzero(self.decided[t]):
+                yield t, int(i), self.obs[t, i], int(self.actions[t, i])
+
+
+# ===================================================================== graph
+def _segment_free(layout: DeviceLayout, release: jnp.ndarray) -> jnp.ndarray:
+    """Free-unit counts per resource, (N, R) float32."""
+    cols = [jnp.sum(release[:, off:off + cap] == 0.0, axis=1)
+            for off, cap in layout.segments]
+    return jnp.stack(cols, axis=1).astype(jnp.float32)
+
+
+def _advance_events(layout: DeviceLayout, arrays, st):
+    """Batched event step: pop+apply ONE coalesced timestamp per env not
+    inside a scheduling pass.  Runs inline in the round body (no
+    ``while_loop`` — its computation boundaries dominate the per-round
+    cost on small problems); an env that pops a decision-free timestamp
+    simply pops again next round, which the 3J+2 round budget covers
+    (each job contributes at most one arrival pop, one completion pop,
+    and one decision per pass it opens)."""
+    jidx = jnp.arange(layout.n_jobs)
+    s = st
+    arrived = jidx[None, :] < s["n_arrived"][:, None]
+    # A pass over an empty queue ends silently (Simulator.next_decision).
+    in_pass = s["in_pass"] & (arrived & ~s["started"]).any(axis=1)
+    adv = ~in_pass & ~s["done"]
+    next_submit = jnp.take_along_axis(
+        arrays["submit_ext"], s["n_arrived"][:, None], axis=1)[:, 0]
+    running = s["started"] & ~s["finished"]
+    next_end = jnp.min(jnp.where(running, s["end"], INF), axis=1)
+    t = jnp.minimum(next_submit, next_end)
+    no_ev = ~jnp.isfinite(t)
+    done = s["done"] | (adv & no_ev)
+    act = adv & ~no_ev
+    now = jnp.where(act, t, s["now"])
+    # Apply ALL events at the popped timestamp (coalescing): arrivals…
+    is_sub = ((jidx[None, :] >= s["n_arrived"][:, None])
+              & (arrays["submit"] == t[:, None]) & act[:, None])
+    n_arrived = s["n_arrived"] + is_sub.sum(axis=1)
+    # …and completions, whose units free up immediately.
+    ends = running & (s["end"] == t[:, None]) & act[:, None]
+    finished = s["finished"] | ends
+    owner = s["owner"]
+    owner_ended = (jnp.take_along_axis(
+        ends, jnp.maximum(owner, 0), axis=1) & (owner >= 0))
+    release = jnp.where(owner_ended, 0.0, s["release"])
+    owner = jnp.where(owner_ended, -1, owner)
+    return {**s, "in_pass": in_pass | act, "done": done, "now": now,
+            "n_arrived": n_arrived, "finished": finished,
+            "release": release, "owner": owner}
+
+
+def _alloc_first_free(layout: DeviceLayout, release, owner, env_mask,
+                      job_idx, demand, est):
+    """Allocate ``demand`` (N, R) lowest-index free units for ``job_idx``
+    in every env of ``env_mask`` (mirrors ``Cluster.allocate``)."""
+    for r, (off, cap) in enumerate(layout.segments):
+        seg = release[:, off:off + cap]
+        freemask = seg == 0.0
+        rank = jnp.cumsum(freemask.astype(jnp.float32), axis=1)
+        take = (freemask & (rank <= demand[:, r:r + 1])
+                & env_mask[:, None])
+        release = release.at[:, off:off + cap].set(
+            jnp.where(take, est[:, None], seg))
+        owner = owner.at[:, off:off + cap].set(
+            jnp.where(take, job_idx[:, None], owner[:, off:off + cap]))
+    return release, owner
+
+
+def _earliest_fit(layout: DeviceLayout, release, free, demand, now):
+    """Per-env earliest time ``demand`` fits assuming estimated releases
+    (mirrors ``Cluster.earliest_fit_time``): the need-th smallest release
+    per resource (free units sort first as 0.0), max over resources."""
+    t_res = now
+    for r, (off, cap) in enumerate(layout.segments):
+        seg_sorted = jnp.sort(release[:, off:off + cap], axis=1)
+        need = demand[:, r]
+        kth_idx = jnp.clip(need.astype(jnp.int32) - 1, 0, cap - 1)
+        kth = jnp.take_along_axis(seg_sorted, kth_idx[:, None], axis=1)[:, 0]
+        t_r = jnp.where(need <= free[:, r], now,
+                        jnp.where(need <= float(cap), kth, INF))
+        t_res = jnp.maximum(t_res, t_r)
+    return t_res
+
+
+def _easy_backfill(layout: DeviceLayout, arrays, st, free, need, waiting,
+                   j_star, d_star):
+    """EASY backfill for envs whose selection did not fit (vectorized
+    mirror of ``Simulator._easy_backfill``): reservation at the earliest
+    fit time, shadow accounting in queue order, then one batched
+    first-fit unit assignment for every job that may jump ahead."""
+    N, J, R = layout.n_envs, layout.n_jobs, layout.n_resources
+    now = st["now"]
+    t_res = _earliest_fit(layout, st["release"], free, d_star, now)
+    do_bf = need & jnp.isfinite(t_res)
+    # Shadow: free units at t_res (estimated releases) minus the
+    # reservation's demand, per resource.
+    shadow_cols = []
+    for r, (off, cap) in enumerate(layout.segments):
+        free_at = jnp.sum(st["release"][:, off:off + cap] <= t_res[:, None],
+                          axis=1).astype(jnp.float32)
+        shadow_cols.append(free_at - d_star[:, r])
+    shadow = jnp.stack(shadow_cols, axis=1)
+
+    ends_before_all = arrays["walltime"] + now[:, None] <= t_res[:, None]
+
+    # The queue walk's carry only changes when a candidate actually
+    # starts, and availability only ever decreases — so walking the
+    # queue in order debiting as we go is equivalent to repeatedly
+    # starting the FIRST still-fitting candidate.  That turns an O(J)
+    # sequential scan into a while_loop with one iteration per started
+    # job (almost always 0-2), each a vectorized pass over the queue.
+    jidx = jnp.arange(J)
+    cand = (do_bf[:, None] & (waiting > 0.5)
+            & (jidx[None, :] != j_star[:, None]))          # (N, J)
+
+    def fitting(free_c, shadow_c, go):
+        # Per-resource (N, J) compares: XLA:CPU runs these an order of
+        # magnitude faster than the equivalent (N, J, R) broadcast+all.
+        fits_now = cand & ~go
+        shadow_ok = None
+        for r in range(R):
+            d_r = arrays["demands"][:, :, r]
+            fits_now = fits_now & (d_r <= free_c[:, r:r + 1])
+            s_r = d_r <= shadow_c[:, r:r + 1]
+            shadow_ok = s_r if shadow_ok is None else shadow_ok & s_r
+        return fits_now & (ends_before_all | shadow_ok)
+
+    # The loop carries the fit matrix so the condition is a 1-op any()
+    # and each iteration evaluates ``fitting`` exactly once.  Each
+    # iteration accepts a whole PREFIX of the fitting candidates: a
+    # candidate is accepted when the cumulative demand of accepted
+    # candidates up to and including it still fits (free and shadow) —
+    # exactly the debits the sequential walk would have applied — and
+    # the first cumulative failure blocks the rest of the queue until
+    # the next iteration re-evaluates them against the debited carry.
+    # One iteration per *blocking event* instead of one per start.
+    def cond(c):
+        return c[3].any()
+
+    def body(c):
+        free_c, shadow_c, go, ok = c
+        ok_f = ok.astype(jnp.float32)
+        debit_f = (ok & ~ends_before_all).astype(jnp.float32)
+        free_ok = None
+        shadow_fit = None
+        d_acc_cols = []
+        s_acc_cols = []
+        for r in range(R):
+            d_r = arrays["demands"][:, :, r]
+            cum_r = jnp.cumsum(ok_f * d_r, axis=1)
+            f_r = cum_r <= free_c[:, r:r + 1]
+            free_ok = f_r if free_ok is None else free_ok & f_r
+            cums_r = jnp.cumsum(debit_f * d_r, axis=1)
+            s_r = cums_r <= shadow_c[:, r:r + 1]
+            shadow_fit = s_r if shadow_fit is None else shadow_fit & s_r
+            d_acc_cols.append(d_r)
+        passes = free_ok & (ends_before_all | shadow_fit)
+        fail = ok & ~passes
+        accept = ok & passes & (jnp.cumsum(fail.astype(jnp.int32), axis=1)
+                                == 0)
+        acc_f = accept.astype(jnp.float32)
+        acc_debit_f = (accept & ~ends_before_all).astype(jnp.float32)
+        d_used = jnp.stack(
+            [(acc_f * d_r).sum(axis=1) for d_r in d_acc_cols], axis=1)
+        s_used = jnp.stack(
+            [(acc_debit_f * d_r).sum(axis=1) for d_r in d_acc_cols], axis=1)
+        free_c = free_c - d_used
+        shadow_c = shadow_c - s_used
+        go = go | accept
+        return (free_c, shadow_c, go, fitting(free_c, shadow_c, go))
+
+    go0 = jnp.zeros((N, J), bool)
+    _, _, bf_start, _ = jax.lax.while_loop(
+        cond, body, (free, shadow, go0, fitting(free, shadow, go0)))
+
+    # Unit assignment, one batched pass per resource: job j takes the
+    # free units whose free-rank falls in its cumulative-demand span —
+    # identical to allocating each job first-fit in queue order.  Most
+    # reservation rounds backfill nothing, so the whole phase is
+    # conditioned on some env actually starting a job.
+    def assign_units(st):
+        est_all = now[:, None] + arrays["walltime"]            # (N, J)
+        release, owner = st["release"], st["owner"]
+        jidx_f = jnp.arange(J, dtype=jnp.float32)
+        for r, (off, cap) in enumerate(layout.segments):
+            seg = release[:, off:off + cap]
+            freemask = seg == 0.0
+            k = jnp.cumsum(freemask.astype(jnp.float32), axis=1)  # (N, cap)
+            need_j = arrays["demands"][:, :, r] * bf_start         # (N, J)
+            cum = jnp.cumsum(need_j, axis=1)
+            assign = (freemask[:, :, None] & bf_start[:, None, :]
+                      & (k[:, :, None] > (cum - need_j)[:, None, :])
+                      & (k[:, :, None] <= cum[:, None, :]))        # (N, cap, J)
+            assign_f = assign.astype(jnp.float32)
+            any_assign = assign.any(axis=2)
+            owner_val = jnp.einsum("nuj,j->nu", assign_f, jidx_f)
+            rel_val = jnp.einsum("nuj,nj->nu", assign_f, est_all)
+            release = release.at[:, off:off + cap].set(
+                jnp.where(any_assign, rel_val, seg))
+            owner = owner.at[:, off:off + cap].set(
+                jnp.where(any_assign, owner_val.astype(jnp.int32),
+                          owner[:, off:off + cap]))
+
+        started = st["started"] | bf_start
+        start = jnp.where(bf_start, now[:, None], st["start"])
+        end = jnp.where(bf_start, now[:, None] + arrays["runtime"],
+                        st["end"])
+        est_end = jnp.where(bf_start, est_all, st["est_end"])
+        any_bf = bf_start.any(axis=1)
+        first = jnp.where(any_bf, jnp.minimum(st["first_start"], now),
+                          st["first_start"])
+        return {**st, "release": release, "owner": owner,
+                "started": started, "start": start, "end": end,
+                "est_end": est_end, "first_start": first}
+
+    return jax.lax.cond(bf_start.any(), assign_units, lambda st: st, st)
+
+
+def _build_obs(layout: DeviceLayout, arrays, st, free, waiting, win_feats,
+               win_valid):
+    """Packed decision rows [state | meas | goal | valid] in-graph,
+    mirroring ``encoding.encode_decision_row`` (float32 throughout)."""
+    N, R, W = layout.n_envs, layout.n_resources, layout.window
+    ts = jnp.float32(layout.time_scale)
+    now = st["now"]
+    valid_f = win_valid.astype(jnp.float32)
+    # Window section: [fracs(R), walltime_norm] are static per job; the
+    # queued-time column is derived from the packed raw submit times.
+    queued = (now[:, None] - win_feats[..., R + 1]) / ts * valid_f
+    win = jnp.concatenate([win_feats[..., :R + 1], queued[..., None]],
+                          axis=-1)
+    parts = [win.reshape(N, W * (R + 2))]
+    # Unit sections use the encoding's reference section sizes; a cluster
+    # with fewer units fills the leading slots (encode_state semantics).
+    # avail/ttf are computed once over the whole unit axis; the per-
+    # segment views below are free slices.
+    busy_all = st["release"] > 0.0
+    avail_all = jnp.where(busy_all, 0.0, 1.0)
+    ttf_all = jnp.where(busy_all,
+                        jnp.maximum(st["release"] - now[:, None], 0.0),
+                        0.0) / ts
+    for r, (off, cap) in enumerate(layout.segments):
+        k = min(cap, int(layout.enc_caps[r]))
+        avail = avail_all[:, off:off + k]
+        ttf = ttf_all[:, off:off + k]
+        pad = int(layout.enc_caps[r]) - k
+        if pad:
+            zeros = jnp.zeros((N, pad), jnp.float32)
+            avail = jnp.concatenate([avail, zeros], axis=1)
+            ttf = jnp.concatenate([ttf, zeros], axis=1)
+        parts.extend([avail, ttf])
+    caps_f = jnp.asarray([max(c, 1) for c in layout.caps], jnp.float32)
+    meas = 1.0 - free / caps_f[None, :]
+    # Eq. (1) goal over the full waiting queue + running remainders.
+    running = st["started"] & ~st["finished"]
+    tw = (arrays["walltime"] * waiting
+          + jnp.maximum(st["est_end"] - now[:, None], 0.0) * running)
+    acc = jnp.einsum("nj,njr->nr", tw, arrays["demands"])
+    demand_time = acc / caps_f[None, :]
+    total = demand_time.sum(axis=1, keepdims=True)
+    goal = jnp.where(total > 0, demand_time / jnp.maximum(total, 1e-30),
+                     1.0 / R)
+    return jnp.concatenate(parts + [meas, goal, valid_f], axis=1)
+
+
+def _device_rollout(layout: DeviceLayout, score_fn, explore: bool,
+                    collect: bool, arrays, policy_state, eps, key):
+    """The whole N-env x T-round rollout as one traced program."""
+    N, J, R, W = (layout.n_envs, layout.n_jobs, layout.n_resources,
+                  layout.window)
+    jidx = jnp.arange(J)
+    st = {
+        "now": jnp.zeros(N, jnp.float32),
+        "n_arrived": jnp.zeros(N, jnp.int32),
+        "started": jnp.zeros((N, J), bool),
+        "finished": jnp.zeros((N, J), bool),
+        "start": jnp.full((N, J), -1.0, jnp.float32),
+        "end": jnp.full((N, J), jnp.inf, jnp.float32),
+        "est_end": jnp.zeros((N, J), jnp.float32),
+        "release": jnp.zeros((N, layout.n_units), jnp.float32),
+        "owner": jnp.full((N, layout.n_units), -1, jnp.int32),
+        "in_pass": jnp.zeros(N, bool),
+        "done": jnp.zeros(N, bool),
+        "decisions": jnp.zeros(N, jnp.int32),
+        "first_start": jnp.full(N, jnp.inf, jnp.float32),
+        "key": key,
+    }
+    obs_dim = (layout.state_dim + 2 * R + W) if layout.requires_obs else W
+
+    # Constant per rollout: keep the concat out of the per-round body.
+    feats = jnp.concatenate(
+        [arrays["static_feats"], arrays["submit_feat"][..., None]],
+        axis=-1)
+
+    def decide(s):
+        now = s["now"]
+        arrived = jidx[None, :] < s["n_arrived"][:, None]
+        waiting = (arrived & ~s["started"]).astype(jnp.float32)
+        need = s["in_pass"] & (waiting.sum(axis=1) > 0) & ~s["done"]
+        free = _segment_free(layout, s["release"])
+        win_feats, win_idx, win_valid = pack_window(waiting, feats, window=W)
+        if layout.requires_obs:
+            obs = _build_obs(layout, arrays, s, free, waiting, win_feats,
+                             win_valid)
+        else:
+            obs = win_valid.astype(jnp.float32)
+        scores = score_fn(policy_state, obs)[:, :W]
+        masked = jnp.where(win_valid, scores, -INF)
+        a = jnp.argmax(masked, axis=1).astype(jnp.int32)
+        if explore:
+            k_next, k1, k2 = jax.random.split(s["key"], 3)
+            n_valid = win_valid.sum(axis=1).astype(jnp.float32)
+            a_rand = jnp.floor(jax.random.uniform(k2, (N,))
+                               * jnp.maximum(n_valid, 1.0)).astype(jnp.int32)
+            roll = jax.random.uniform(k1, (N,)) < eps
+            a = jnp.where(roll, a_rand, a)
+            s = {**s, "key": k_next}
+        j_star = jnp.take_along_axis(win_idx, a[:, None], axis=1)[:, 0]
+        d_star = jnp.take_along_axis(
+            arrays["demands"], j_star[:, None, None], axis=1)[:, 0]   # (N, R)
+        fits = jnp.all(d_star <= free, axis=1)
+        start_env = need & fits
+        reserve_env = need & ~fits
+        # --- immediate start (scheduling pass continues)
+        wall_star = jnp.take_along_axis(arrays["walltime"], j_star[:, None],
+                                        axis=1)[:, 0]
+        run_star = jnp.take_along_axis(arrays["runtime"], j_star[:, None],
+                                       axis=1)[:, 0]
+        est = now + wall_star
+        release, owner = _alloc_first_free(
+            layout, s["release"], s["owner"], start_env, j_star, d_star, est)
+        sel = (jidx[None, :] == j_star[:, None]) & start_env[:, None]
+        s = {**s, "release": release, "owner": owner,
+             "started": s["started"] | sel,
+             "start": jnp.where(sel, now[:, None], s["start"]),
+             "end": jnp.where(sel, (now + run_star)[:, None], s["end"]),
+             "est_end": jnp.where(sel, est[:, None], s["est_end"]),
+             "decisions": s["decisions"] + need,
+             "first_start": jnp.where(start_env,
+                                      jnp.minimum(s["first_start"], now),
+                                      s["first_start"])}
+        # --- reservation + EASY backfill (scheduling pass ends).  The
+        # call is cheap when no env reserved (no fitting candidates ->
+        # zero queue-walk iterations, unit assignment conditioned out),
+        # so it runs unconditionally rather than behind another cond.
+        if layout.backfill:
+            s = _easy_backfill(layout, arrays, s, free, reserve_env,
+                               waiting, j_star, d_star)
+        s = {**s, "in_pass": s["in_pass"] & ~reserve_env}
+        a_out = jnp.where(need, a, -1)
+        obs_out = obs if collect else jnp.zeros((N, 0), jnp.float32)
+        return s, a_out, need, obs_out
+
+    def round_body(s, _):
+        s = _advance_events(layout, arrays, s)
+        # Single-pop advancement can leave an env in_pass with an empty
+        # queue (completion-only timestamp) — only envs with waiting
+        # jobs actually need a decision this round.
+        arrived = jidx[None, :] < s["n_arrived"][:, None]
+        any_need = jnp.any(s["in_pass"] & ~s["done"]
+                           & (arrived & ~s["started"]).any(axis=1))
+
+        def live(s):
+            return decide(s)
+
+        def idle(s):
+            return (s, jnp.full(N, -1, jnp.int32), jnp.zeros(N, bool),
+                    jnp.zeros((N, obs_dim if collect else 0), jnp.float32))
+
+        s, a_out, need, obs_out = jax.lax.cond(any_need, live, idle, s)
+        return s, (a_out, need, obs_out)
+
+    st, (actions, decided, obs_log) = jax.lax.scan(
+        round_body, st, None, length=layout.rounds)
+    out = {"started": st["started"], "start": st["start"], "end": st["end"],
+           "now": st["now"], "decisions": st["decisions"],
+           "first_start": st["first_start"], "done": st["done"],
+           "actions": actions, "decided": decided}
+    if collect:
+        out["obs"] = obs_log
+    return out
+
+
+# ====================================================================== host
+class DeviceSimulator:
+    """N jobsets, one shared cluster spec, one jitted rollout program.
+
+    ``policy`` must implement the device stages of the ``Policy``
+    protocol (``init_state`` / ``score_window``); use
+    ``repro.core.policy_api.supports_device`` to check.  Construction
+    packs the traces into fixed-capacity arrays and compiles the rollout
+    on first use; ``run()`` matches the ``Simulator``/``VectorSimulator``
+    result contract, ``rollout()`` additionally returns the decision
+    trace (and, with ``collect=True``, the packed decision rows for
+    training ingestion).
+    """
+
+    def __init__(self, resources: Sequence[ResourceSpec],
+                 jobsets: Sequence[Sequence[Job]], policy,
+                 config: SimConfig | None = None):
+        from ..core.policy_api import supports_device
+        if not supports_device(policy):
+            raise TypeError(
+                f"{type(policy).__name__} has no device stages "
+                "(init_state/score_window) — run it through Simulator or "
+                "VectorSimulator instead")
+        if not jobsets or any(len(js) == 0 for js in jobsets):
+            raise ValueError("DeviceSimulator needs >= 1 non-empty jobset")
+        self.resources = list(resources)
+        self.policy = policy
+        self.config = config or SimConfig.for_engine("device")
+        names = tuple(r.name for r in self.resources)
+        caps = tuple(int(r.capacity) for r in self.resources)
+        requires_obs = bool(getattr(policy, "requires_obs", True))
+        enc = getattr(policy, "enc", None)
+        if requires_obs:
+            assert enc is not None, \
+                f"{type(policy).__name__} requires obs but has no enc"
+            if tuple(enc.resource_names) != names:
+                raise ValueError(
+                    f"policy encodes resources {tuple(enc.resource_names)} "
+                    f"but the cluster has {names}")
+            if int(enc.window) != int(self.config.window):
+                raise ValueError(
+                    f"policy window {enc.window} != sim window "
+                    f"{self.config.window} — the device engine scores "
+                    "exactly the simulation window")
+            enc_caps = tuple(int(c) for c in enc.capacities)
+            time_scale = float(enc.time_scale)
+        else:
+            enc_caps = caps
+            time_scale = 86400.0
+
+        self.jobsets = [sorted((j.copy() for j in js),
+                               key=lambda j: (j.submit, j.jid))
+                        for js in jobsets]
+        N = len(self.jobsets)
+        J = max(len(js) for js in self.jobsets)
+        rounds = 3 * J + 2
+        if self.config.max_rounds is not None:
+            rounds = min(rounds, int(self.config.max_rounds))
+        self.layout = DeviceLayout(
+            names=names, caps=caps, enc_caps=enc_caps,
+            window=int(self.config.window), n_envs=N, n_jobs=J,
+            rounds=rounds, backfill=bool(self.config.backfill),
+            requires_obs=requires_obs, time_scale=time_scale)
+        self.arrays = self._pack(self.jobsets)
+        self.stats = DeviceStats()
+        self._jitted: Dict[Tuple[bool, bool], object] = {}
+
+    # ------------------------------------------------------------- packing
+    def _pack(self, jobsets) -> Dict[str, jnp.ndarray]:
+        lay = self.layout
+        N, J, R = lay.n_envs, lay.n_jobs, lay.n_resources
+        submit = np.full((N, J), np.inf, np.float64)
+        runtime = np.zeros((N, J), np.float64)
+        walltime = np.zeros((N, J), np.float64)
+        demands = np.zeros((N, J, R), np.float32)
+        static = np.zeros((N, J, R + 1), np.float32)
+        caps_f = [float(max(c, 1)) for c in lay.caps]
+        for i, js in enumerate(jobsets):
+            for j, job in enumerate(js):
+                submit[i, j] = job.submit
+                runtime[i, j] = job.runtime
+                walltime[i, j] = job.walltime
+                for r, n in enumerate(lay.names):
+                    d = job.demands.get(n, 0)
+                    demands[i, j, r] = d
+                    static[i, j, r] = d / caps_f[r]       # f64 div, f32 store
+                static[i, j, R] = job.walltime / lay.time_scale
+        submit_ext = np.concatenate(
+            [submit, np.full((N, 1), np.inf)], axis=1)
+        return {
+            "submit": jnp.asarray(submit, jnp.float32),
+            "submit_ext": jnp.asarray(submit_ext, jnp.float32),
+            "submit_feat": jnp.asarray(
+                np.where(np.isfinite(submit), submit, 0.0), jnp.float32),
+            "runtime": jnp.asarray(runtime, jnp.float32),
+            "walltime": jnp.asarray(walltime, jnp.float32),
+            "demands": jnp.asarray(demands),
+            "static_feats": jnp.asarray(static),
+        }
+
+    # ------------------------------------------------------------- rollout
+    def _fn(self, explore: bool, collect: bool):
+        key = (explore, collect)
+        if key not in self._jitted:
+            self._jitted[key] = jax.jit(functools.partial(
+                _device_rollout, self.layout, self.policy.score_window,
+                explore, collect))
+        return self._jitted[key]
+
+    def rollout(self, eps: Optional[float] = None, seed: int = 0,
+                collect: bool = False) -> DeviceRollout:
+        """Run every environment to completion in one device program.
+
+        ``eps``: when set, actions are epsilon-greedy with in-graph
+        (jax.random) draws — the device counterpart of the agent's
+        training exploration (note: a *different* RNG stream than the
+        host engines' numpy draws).  ``collect=True`` additionally
+        returns the packed decision rows for trainer ingestion.
+        """
+        explore = eps is not None
+        out = self._fn(explore, collect)(
+            self.arrays, self.policy.init_state(),
+            jnp.float32(0.0 if eps is None else eps),
+            jax.random.PRNGKey(seed))
+        out = {k: np.asarray(v) for k, v in out.items()}
+        if not out["done"].all():
+            raise RuntimeError(
+                f"device rollout exhausted its round budget "
+                f"({self.layout.rounds}); raise SimConfig.max_rounds")
+        decided = out["decided"]
+        self.stats = DeviceStats(
+            rounds=int(decided.any(axis=1).sum()),
+            decisions=int(decided.sum()),
+            policy_calls=int(decided.any(axis=1).sum()),
+            max_batch=int(decided.sum(axis=1).max(initial=0)))
+        return DeviceRollout(
+            actions=out["actions"], decided=decided,
+            stats=self.stats, obs=out.get("obs"),
+            _build=lambda: self._results(out))
+
+    def run(self) -> List[SimResult]:
+        """Greedy rollout; result contract matches the host engines."""
+        return self.rollout().results
+
+    # ------------------------------------------------------------- results
+    def _results(self, out) -> List[SimResult]:
+        results = []
+        for i, js in enumerate(self.jobsets):
+            started_m = out["started"][i]
+            jobs = []
+            for j, job in enumerate(js):
+                job = job.copy()
+                if started_m[j]:
+                    job.start = float(out["start"][i, j])
+                    job.end = float(out["end"][i, j])
+                jobs.append(job)
+            started = [jb for jb in jobs if jb.started]
+            cluster = Cluster(self.resources)
+            acc = MetricsAccumulator(cluster)
+            acc.last_time = float(out["now"][i])
+            acc.start_time = (float(out["first_start"][i]) if started
+                              else None)
+            for r, n in enumerate(self.layout.names):
+                acc.busy_area[n] = float(sum(
+                    jb.demands.get(n, 0) * (jb.end - jb.start)
+                    for jb in started))
+            results.append(SimResult(
+                metrics=acc.summarize(started),
+                jobs=jobs,
+                makespan=float(out["now"][i]),
+                decisions=int(out["decisions"][i]),
+                n_unstarted=len(jobs) - len(started)))
+        return results
+
+
+def run_traces_device(resources: Sequence[ResourceSpec],
+                      jobsets: Sequence[Sequence[Job]], policy,
+                      config: SimConfig | None = None) -> List[SimResult]:
+    """Convenience device counterpart of ``run_trace``/``run_traces``."""
+    cfg = config or SimConfig.for_engine("device")
+    return DeviceSimulator(resources, jobsets, policy, cfg).run()

@@ -41,6 +41,10 @@ class SchedContext:
 
 
 class SchedulingPolicy(Protocol):
+    """Deprecation alias: the ``select`` stage of the unified ``Policy``
+    protocol (``repro.core.policy_api.Policy``).  Kept so external
+    callers typed against the old single-stage surface keep working."""
+
     def select(self, ctx: SchedContext) -> int:
         """Return an index into ``ctx.window``."""
         ...
@@ -49,31 +53,57 @@ class SchedulingPolicy(Protocol):
     def notify_reserved(self, job: Job, ctx: SchedContext) -> None: ...
 
 
+ENGINES = ("sequential", "vector", "device")
+
+
 @dataclass
 class SimConfig:
     window: int = 10             # W, paper §III-C / §IV-C
     backfill: bool = True        # EASY backfilling
     max_events: int = 50_000_000
+    engine: str = "sequential"   # "sequential" | "vector" | "device"
+    max_rounds: Optional[int] = None   # device engine round-budget override
+
+    @classmethod
+    def for_engine(cls, engine: str = "sequential", *, window: int = 10,
+                   backfill: bool = True, max_events: Optional[int] = None,
+                   max_rounds: Optional[int] = None) -> "SimConfig":
+        """The single validated constructor path for all three engines.
+
+        Every harness that fans traces over an engine (sweep, drift
+        phases, the evaluation matrix, service-routed replay, the device
+        rollout) builds its ``SimConfig`` here, so validation — and any
+        future knob — lands everywhere at once.  ``max_rounds`` bounds
+        the device engine's scan length (it raises if the budget proves
+        too small rather than silently truncating); the host engines
+        ignore it.
+        """
+        if engine not in ENGINES:
+            raise ValueError(
+                f"unknown engine {engine!r}; expected one of {ENGINES}")
+        window = int(window)
+        if window < 1:
+            raise ValueError(f"window must be >= 1, got {window}")
+        cfg = SimConfig(window=window, backfill=bool(backfill), engine=engine)
+        if max_events is not None:
+            if int(max_events) < 1:
+                raise ValueError(f"max_events must be >= 1, got {max_events}")
+            cfg.max_events = int(max_events)
+        if max_rounds is not None:
+            if int(max_rounds) < 1:
+                raise ValueError(f"max_rounds must be >= 1, got {max_rounds}")
+            cfg.max_rounds = int(max_rounds)
+        return cfg
 
 
 def sim_config(window: int = 10, backfill: bool = True,
-               max_events: Optional[int] = None) -> SimConfig:
-    """Validated ``SimConfig`` from the ``(window, backfill)`` pair.
-
-    Every harness that fans traces over the engine (sweep, drift phases,
-    the evaluation matrix, service-routed replay) plumbs the same two
-    knobs; this is the one place they become a ``SimConfig``, so the
-    validation — and any future knob — lands everywhere at once.
-    """
-    window = int(window)
-    if window < 1:
-        raise ValueError(f"window must be >= 1, got {window}")
-    cfg = SimConfig(window=window, backfill=bool(backfill))
-    if max_events is not None:
-        if int(max_events) < 1:
-            raise ValueError(f"max_events must be >= 1, got {max_events}")
-        cfg.max_events = int(max_events)
-    return cfg
+               max_events: Optional[int] = None,
+               engine: str = "sequential",
+               max_rounds: Optional[int] = None) -> SimConfig:
+    """Functional alias of ``SimConfig.for_engine`` (kept for callers of
+    the original ``(window, backfill)`` signature)."""
+    return SimConfig.for_engine(engine, window=window, backfill=backfill,
+                                max_events=max_events, max_rounds=max_rounds)
 
 
 @dataclass

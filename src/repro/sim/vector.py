@@ -41,6 +41,10 @@ from .simulator import SchedContext, SimConfig, SimResult, Simulator
 
 
 class BatchSchedulingPolicy(Protocol):
+    """Deprecation alias: the batched host stage of the unified
+    ``Policy`` protocol.  ``repro.core.policy_api.WindowPolicy`` derives
+    this stage from ``score_window`` for protocol policies."""
+
     def select_batch(self, ctxs: Sequence[SchedContext]) -> np.ndarray:
         """Return one window index per context."""
         ...
@@ -127,9 +131,17 @@ class VectorSimulator:
             self.stats.episodes += 1
             result = self.sims[i].result()
             results.append(result)
+            prev_policy = self.sims[i].policy
             nxt = refill(i, result)
             if nxt is None:
                 return None
+            if nxt.policy is None:
+                # Carry the slot's policy instance across the refill: a
+                # factory-built engine owns per-environment policy state
+                # (GA plan caches, learning baselines) that must survive
+                # the trace swap — re-instantiating here would silently
+                # reset stateful policies mid-curriculum.
+                nxt.policy = prev_policy
             self.sims[i] = nxt
 
     def run(self, refill=None, on_round=None) -> List[SimResult]:
@@ -181,5 +193,6 @@ def run_traces(resources: Sequence[ResourceSpec],
                backfill: bool = True) -> List[SimResult]:
     """Convenience batched counterpart of ``run_trace``."""
     vec = VectorSimulator.from_jobsets(
-        resources, jobsets, policy, SimConfig(window=window, backfill=backfill))
+        resources, jobsets, policy,
+        SimConfig.for_engine("vector", window=window, backfill=backfill))
     return vec.run()

@@ -31,7 +31,7 @@ import numpy as np
 
 from ..sim.cluster import ResourceSpec
 from ..sim.job import Job
-from ..sim.simulator import SimResult, Simulator, sim_config
+from ..sim.simulator import SimConfig, SimResult, Simulator
 from ..sim.vector import VectorSimulator
 from .scenarios import bb_pool_units
 from .theta import ThetaConfig
@@ -202,7 +202,7 @@ class PhaseResult:
 
 def run_phases(policy, resources: Sequence[ResourceSpec],
                phases_per_env: Sequence[Sequence[Sequence[Job]]],
-               window: int = 10, backfill: bool = True,
+               config: Optional[SimConfig] = None,
                on_round=None, policy_factory=None) -> List[PhaseResult]:
     """Walk each lockstep lane through its phase sequence (§V-D).
 
@@ -210,15 +210,16 @@ def run_phases(policy, resources: Sequence[ResourceSpec],
     when a lane drains a phase, the ``refill`` hook immediately seeds it
     with the next one, so the decision batch stays wide across the whole
     drift experiment and each phase still yields its own ``SimResult``.
-    ``on_round`` is forwarded to ``VectorSimulator.run`` (the §V-D goal
-    trace can be logged there).
+    ``config`` comes from ``SimConfig.for_engine`` (window/backfill live
+    there); ``on_round`` is forwarded to ``VectorSimulator.run`` (the
+    §V-D goal trace can be logged there).
 
     Sequential stateful policies (``GAOptimizer``'s plan cache) must not
     be shared across lanes: pass ``policy_factory`` (with ``policy=None``)
     to give every lane its own instance; sharing a ``select_batch``-less
     policy across >1 lanes is rejected.
     """
-    sim_cfg = sim_config(window=window, backfill=backfill)
+    sim_cfg = config if config is not None else SimConfig.for_engine("vector")
     if policy_factory is not None:
         env_policies = [policy_factory() for _ in phases_per_env]
         shared = None

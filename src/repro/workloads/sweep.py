@@ -21,7 +21,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 from ..core.train import EnvSlot
 from ..sim.cluster import ResourceSpec
 from ..sim.job import Job
-from ..sim.simulator import SimResult, Simulator, sim_config
+from ..sim.simulator import SimConfig, SimResult, Simulator
 from ..sim.vector import VectorSimulator
 from .scenarios import build_scenarios
 from .theta import ThetaConfig
@@ -102,15 +102,18 @@ def _row(task: SweepTask, result: SimResult) -> Dict:
 
 def run_sweep(resources: Sequence[ResourceSpec],
               tasks: Sequence[Tuple[SweepTask, List[Job]]], policy,
-              window: int = 10, backfill: bool = True,
-              vector: int = 0) -> Dict:
+              config: Optional[SimConfig] = None, vector: int = 0) -> Dict:
     """Evaluate ``policy`` over every sweep task.
 
     vector=0/1 runs traces one at a time (the classic loop); vector=N
     advances N environments in lockstep with batched policy inference.
-    Tasks beyond N are processed in successive groups of N.
+    Tasks beyond N are processed in successive groups of N.  ``config``
+    comes from ``SimConfig.for_engine`` (window/backfill live there, not
+    in per-harness kwargs); it defaults to the engine implied by
+    ``vector``.
     """
-    sim_cfg = sim_config(window=window, backfill=backfill)
+    engine = "vector" if vector and vector > 1 else "sequential"
+    sim_cfg = config if config is not None else SimConfig.for_engine(engine)
     t0 = time.perf_counter()
     results: List[SimResult] = []
     vector_stats: List[Dict] = []

@@ -1,0 +1,220 @@
+"""Device-resident rollout engine: round-for-round parity with the
+sequential engine (registry scenarios, both NN backends), window-pack
+kernel parity, Policy-protocol gating, and ``SimConfig.for_engine``."""
+import numpy as np
+import pytest
+
+from repro.core import (AgentConfig, FCFSPolicy, GAConfig, GAOptimizer,
+                        MRSchAgent, ScalarRLConfig, ScalarRLPolicy,
+                        supports_batch, supports_device)
+from repro.kernels.window_pack.ops import pack_window
+from repro.sim import (DeviceSimulator, Job, ResourceSpec, SimConfig,
+                       Simulator, run_traces_device, sim_config)
+from repro.workloads import ThetaConfig
+from repro.workloads.registry import build_jobs
+
+RES = [ResourceSpec("node", 16), ResourceSpec("bb", 8)]
+
+
+def synth_jobs(seed: int, n: int = 40):
+    rng = np.random.default_rng(seed)
+    jobs = []
+    t = 0.0
+    for i in range(n):
+        t += float(rng.exponential(40.0))
+        runtime = float(rng.uniform(20, 300))
+        jobs.append(Job(jid=i, submit=t, runtime=runtime,
+                        walltime=runtime * float(rng.uniform(1.0, 2.0)),
+                        demands={"node": int(rng.integers(1, 12)),
+                                 "bb": int(rng.integers(0, 6))}))
+    return jobs
+
+
+def small_agent(resources, seed: int = 0, backend: str = "xla") -> MRSchAgent:
+    return MRSchAgent(resources, AgentConfig(
+        state_hidden=(32, 16), state_out=8, module_hidden=4, seed=seed,
+        backend=backend))
+
+
+class _Recorder:
+    """Wrap a policy so the sequential engine's action trace is kept."""
+
+    def __init__(self, policy):
+        self.policy = policy
+        self.actions = []
+
+    def select(self, ctx):
+        a = int(self.policy.select(ctx))
+        self.actions.append(a)
+        return a
+
+
+def seq_run(resources, jobs, policy):
+    rec = _Recorder(policy)
+    result = Simulator(resources, jobs, rec, SimConfig()).run()
+    return result, rec.actions
+
+
+def env_actions(ro, i):
+    return [int(a) for a, d in zip(ro.actions[:, i], ro.decided[:, i]) if d]
+
+
+def assert_results_close(a, b, rtol=1e-5, atol=1e-2):
+    """Host (f64) vs device (f32 clock) results: same schedule, metrics
+    equal to float32 precision (time ulp ~2e-3 s at day scale)."""
+    assert a.decisions == b.decisions
+    assert a.n_unstarted == b.n_unstarted
+    ra, rb = a.metrics.as_row(), b.metrics.as_row()
+    assert set(ra) == set(rb)
+    for k in ra:
+        assert np.isclose(ra[k], rb[k], rtol=rtol, atol=atol), \
+            (k, ra[k], rb[k])
+    for ja, jb in zip(a.jobs, b.jobs):
+        assert ja.jid == jb.jid and ja.started == jb.started
+        if ja.started:
+            assert np.isclose(ja.start, jb.start, rtol=1e-6, atol=1e-2)
+
+
+# ------------------------------------------------------- N=1 parity (pinned)
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_device_equals_sequential_fcfs(seed):
+    """Same actions, decision for decision, and the same schedule."""
+    jobs = synth_jobs(seed)
+    seq, actions = seq_run(RES, jobs, FCFSPolicy())
+    dev = DeviceSimulator(RES, [jobs], FCFSPolicy())
+    ro = dev.rollout()
+    assert env_actions(ro, 0) == actions
+    assert_results_close(seq, ro.results[0])
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+@pytest.mark.parametrize("scenario", ["S2", "diurnal-heavy"])
+def test_device_equals_sequential_agent_registry(scenario, backend):
+    """The acceptance pin: N=1 device rollout reproduces the sequential
+    engine round for round on registry scenarios, on both NN backends."""
+    theta = ThetaConfig.mini(seed=0, duration_days=0.4, jobs_per_day=110)
+    res = theta.resources()
+    jobs = build_jobs(scenario, theta, seed=1)
+    agent = small_agent(res, backend=backend)
+    seq, actions = seq_run(res, jobs, agent)
+    ro = DeviceSimulator(res, [jobs], agent).rollout()
+    assert env_actions(ro, 0) == actions
+    assert_results_close(seq, ro.results[0])
+
+
+def test_device_equals_sequential_scalar_rl():
+    jobs = synth_jobs(7)
+    rl = ScalarRLPolicy(RES, ScalarRLConfig(hidden=(16, 8)))
+    seq, actions = seq_run(RES, jobs, rl)
+    ro = DeviceSimulator(RES, [jobs], rl).rollout()
+    assert env_actions(ro, 0) == actions
+    assert_results_close(seq, ro.results[0])
+
+
+def test_device_multi_env_matches_per_env_sequential():
+    """N>1 envs share one program but stay independent trajectories."""
+    jobsets = [synth_jobs(seed, n=25) for seed in range(4)]
+    ro = DeviceSimulator(RES, jobsets, FCFSPolicy()).rollout()
+    for i, jobs in enumerate(jobsets):
+        seq, actions = seq_run(RES, jobs, FCFSPolicy())
+        assert env_actions(ro, i) == actions
+        assert_results_close(seq, ro.results[i])
+    st = ro.stats
+    assert st.decisions == sum(r.decisions for r in ro.results)
+    assert st.policy_calls == st.rounds
+    assert 1 < st.max_batch <= 4
+
+
+def test_device_no_backfill_matches_sequential():
+    jobs = synth_jobs(3)
+    cfg = SimConfig.for_engine("device", backfill=False)
+    seq_nb = Simulator(RES, jobs, FCFSPolicy(),
+                       SimConfig(backfill=False)).run()
+    ro = DeviceSimulator(RES, [jobs], FCFSPolicy(), cfg).rollout()
+    assert_results_close(seq_nb, ro.results[0])
+
+
+# ------------------------------------------------------------ rollout extras
+def test_rollout_collect_yields_transitions():
+    jobs = synth_jobs(0, n=15)
+    agent = small_agent(RES)
+    dev = DeviceSimulator(RES, [jobs], agent)
+    ro = dev.rollout(collect=True)
+    trans = list(ro.transitions())
+    assert len(trans) == ro.stats.decisions
+    obs_dim = dev.layout.state_dim + 2 * 2 + dev.layout.window
+    for t, i, row, a in trans:
+        assert row.shape == (obs_dim,)
+        assert 0 <= a < dev.layout.window
+        assert bool(ro.decided[t, i])
+
+
+def test_rollout_epsilon_greedy_still_schedules_everything():
+    jobs = synth_jobs(1, n=20)
+    ro = DeviceSimulator(RES, [jobs], small_agent(RES)).rollout(eps=1.0,
+                                                                seed=3)
+    assert ro.results[0].n_unstarted == 0
+    assert all(0 <= a < 10 for a in env_actions(ro, 0))
+
+
+def test_run_traces_device_convenience():
+    jobsets = [synth_jobs(s, n=12) for s in range(2)]
+    out = run_traces_device(RES, jobsets, FCFSPolicy())
+    assert len(out) == 2 and all(r.n_unstarted == 0 for r in out)
+
+
+# ------------------------------------------------------------ protocol gates
+def test_device_rejects_host_only_policy():
+    ga = GAOptimizer(GAConfig(population=4, generations=2))
+    assert not supports_device(ga)
+    assert supports_batch(FCFSPolicy()) and supports_device(FCFSPolicy())
+    with pytest.raises(TypeError, match="device stages"):
+        DeviceSimulator(RES, [synth_jobs(0, n=5)], ga)
+
+
+def test_device_rejects_window_mismatch():
+    agent = small_agent(RES)                       # enc.window == 10
+    with pytest.raises(ValueError, match="window"):
+        DeviceSimulator(RES, [synth_jobs(0, n=5)], agent,
+                        SimConfig.for_engine("device", window=5))
+
+
+def test_device_round_budget_error():
+    cfg = SimConfig.for_engine("device", max_rounds=2)
+    with pytest.raises(RuntimeError, match="round budget"):
+        DeviceSimulator(RES, [synth_jobs(0, n=20)], FCFSPolicy(),
+                        cfg).rollout()
+
+
+# ----------------------------------------------------------- window-pack op
+def test_window_pack_kernel_matches_reference():
+    rng = np.random.default_rng(0)
+    waiting = (rng.uniform(size=(3, 50)) < 0.4).astype(np.float32)
+    feats = rng.normal(size=(3, 50, 7)).astype(np.float32)
+    ref = pack_window(waiting, feats, window=10, use_pallas=False)
+    ker = pack_window(waiting, feats, window=10, use_pallas=True,
+                      interpret=True)
+    np.testing.assert_allclose(np.asarray(ker[0]), np.asarray(ref[0]),
+                               rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(ker[1]), np.asarray(ref[1]))
+    np.testing.assert_array_equal(np.asarray(ker[2]), np.asarray(ref[2]))
+    # Packing semantics: slot w holds the (w+1)-th waiting job's features.
+    wait_idx = np.flatnonzero(waiting[1] > 0.5)
+    n = min(len(wait_idx), 10)
+    assert list(np.asarray(ref[1])[1, :n]) == list(wait_idx[:n])
+    assert np.asarray(ref[2])[1, :n].all()
+
+
+# ------------------------------------------------------ for_engine construct
+def test_for_engine_is_the_single_constructor_path():
+    cfg = SimConfig.for_engine("device", window=6, backfill=False,
+                               max_rounds=99)
+    assert (cfg.engine, cfg.window, cfg.backfill, cfg.max_rounds) \
+        == ("device", 6, False, 99)
+    assert sim_config(window=6).engine == "sequential"  # deprecation alias
+    with pytest.raises(ValueError, match="engine"):
+        SimConfig.for_engine("gpu_cluster")
+    with pytest.raises(ValueError):
+        SimConfig.for_engine("vector", window=0)
+    with pytest.raises(ValueError):
+        SimConfig.for_engine("device", max_rounds=0)

@@ -154,3 +154,39 @@ def test_metrics_as_row_covers_every_field():
         assert row[f.name] == getattr(m, f.name), f.name
     assert row["util_node"] == 0.5 and row["util_bb"] == 0.25
     assert len(row) == len(dataclasses.fields(ScheduleMetrics)) - 1 + 2
+
+
+@pytest.mark.slow
+@settings(max_examples=20, deadline=None)
+@given(st.lists(
+    st.tuples(st.integers(0, 60), st.integers(1, 300), st.integers(0, 200),
+              st.integers(1, 8), st.integers(0, 4)),
+    min_size=1, max_size=25))
+def test_three_engines_agree_on_f32_exact_traces(spec):
+    """Property: the sequential, vector, and device engines produce the
+    same schedule.  Times are drawn as integers, which float32 represents
+    exactly (< 2**24), so the device engine's f32 clock can introduce no
+    rounding and no event-time collisions — every derived metric must
+    match across all three engines to numerical noise."""
+    from repro.sim import run_traces, run_traces_device
+
+    jobs, t = [], 0.0
+    for i, (gap, r, w, n, b) in enumerate(spec):
+        t += gap
+        jobs.append(Job(jid=i, submit=t, runtime=float(r),
+                        walltime=float(r + w),
+                        demands={"node": n, "bb": b}))
+    res = [ResourceSpec("node", 8), ResourceSpec("bb", 4)]
+    seq = run_trace(res, jobs, FCFSPolicy())
+    vec = run_traces(res, [jobs], FCFSPolicy())[0]
+    dev = run_traces_device(res, [jobs], FCFSPolicy())[0]
+    for other in (vec, dev):
+        assert other.decisions == seq.decisions
+        assert other.n_unstarted == seq.n_unstarted
+        ra, rb = seq.metrics.as_row(), other.metrics.as_row()
+        for k in ra:
+            assert rb[k] == pytest.approx(ra[k], rel=1e-6, abs=1e-6), k
+        for ja, jb in zip(seq.jobs, other.jobs):
+            assert (ja.jid, ja.started) == (jb.jid, jb.started)
+            if ja.started:
+                assert jb.start == pytest.approx(ja.start, abs=1e-3)

@@ -114,6 +114,41 @@ def test_vector_stats_show_batching():
     assert 1 < st.max_batch <= 4
 
 
+class _CountingPolicy:
+    """Stateful sequential policy: remembers how many decisions it made."""
+
+    def __init__(self):
+        self.count = 0
+
+    def select(self, ctx):
+        self.count += 1
+        return 0
+
+
+def test_from_factory_policy_survives_refill():
+    """Regression: a factory-built engine owns per-slot policy instances;
+    a refill hook that hands back a policy-less ``Simulator`` must inherit
+    the slot's instance instead of silently resetting its state."""
+    made = []
+
+    def factory():
+        p = _CountingPolicy()
+        made.append(p)
+        return p
+
+    vec = VectorSimulator.from_factory(RES, [synth_jobs(0, n=10)], factory)
+    extra = [synth_jobs(1, n=10)]
+
+    def refill(i, result):
+        return Simulator(RES, extra.pop(), None) if extra else None
+
+    results = vec.run(refill=refill)
+    assert len(results) == 2
+    assert len(made) == 1                    # no mid-curriculum re-instantiation
+    assert vec.sims[0].policy is made[0]
+    assert made[0].count == sum(r.decisions for r in results)
+
+
 def test_unstarted_jobs_reported_not_dropped():
     """A job that can never fit stays in result.jobs and is counted, and
     the wait/slowdown aggregates ignore it instead of going negative."""
