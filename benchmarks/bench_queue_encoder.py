@@ -1,0 +1,133 @@
+"""Queue-encoder A/B: MLP window encoding vs queue-as-tokens attention.
+
+Trains one agent per state module (same seeds, same curriculum) on the
+huge-queue registry scenarios — the regime where the classic W-window
+encoding is blind to nearly all of the backlog — then evaluates both on
+held-out huge-queue traces.  Emits per-(module, scenario) metric rows,
+the training-loss trajectory (the "attention trains end-to-end" gate),
+and the attention/MLP wait ratio per scenario.
+
+CLI:
+    python -m benchmarks.bench_queue_encoder --smoke       # CI sizing
+    python -m benchmarks.bench_queue_encoder               # quick local
+    python -m benchmarks.bench_queue_encoder --smoke --update-baseline
+        # refresh the committed benchmarks/baselines/queue_encoder_ab.json
+        # (the curated contract the nightly check_bench gate compares to)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from dataclasses import replace
+
+from repro.core import MRSchAgent, evaluate, train_agent
+from repro.workloads import build_jobs
+
+from .common import agent_config, metric_row, mini_setup, save_json
+
+BASELINE_DIR = os.path.join(os.path.dirname(__file__), "baselines")
+SCHEMA = "mrsch.bench.queue_encoder/v1"
+EVAL_SCENARIOS = ("huge-queue-flood", "huge-queue-sustained")
+
+
+def _agent(resources, module: str, quick: bool, queue_cap: int,
+           seed: int) -> MRSchAgent:
+    cfg = replace(agent_config(quick),
+                  state_module=module, seed=seed, queue_cap=queue_cap,
+                  attn_dim=32 if quick else 64,
+                  attn_heads=2 if quick else 4,
+                  attn_layers=1 if quick else 2)
+    return MRSchAgent(resources, cfg)
+
+
+def run(quick: bool = True, seed: int = 0, smoke: bool = False,
+        baseline_path: str | None = None):
+    if smoke:
+        cfg, res = mini_setup(seed=seed, duration_days=0.5,
+                              jobs_per_day=160.0)
+        queue_cap = 48
+    else:
+        cfg, res = mini_setup(seed=seed, duration_days=1.0,
+                              jobs_per_day=260.0)
+        queue_cap = 64 if quick else 256
+    train_sets = [build_jobs("huge-queue-flood", cfg, seed=seed + i)
+                  for i in (1, 2, 3)]
+    eval_traces = {name: build_jobs(name, cfg, seed=seed + 7)
+                   for name in EVAL_SCENARIOS}
+
+    rows, loss = [], {}
+    waits: dict = {}
+    for module in ("mlp", "attention"):
+        agent = _agent(res, module, quick, queue_cap, seed)
+        log = train_agent(agent, res, train_sets)
+        losses = [float(x) for x in log.episode_losses]
+        loss[module] = {
+            "first": round(losses[0], 4) if losses else None,
+            "last": round(losses[-1], 4) if losses else None,
+            "n_episodes": len(losses),
+            "decreased": bool(losses and losses[-1] < losses[0]),
+        }
+        for name, jobs in eval_traces.items():
+            r = evaluate(agent, res, jobs, window=agent.config.window)
+            row = metric_row(module.upper(), r)
+            row["scenario"] = name
+            rows.append(row)
+            waits.setdefault(name, {})[module] = row["avg_wait"]
+
+    out = {
+        "bench": "queue_encoder_ab",
+        "schema": SCHEMA,
+        "smoke": smoke,
+        "quick": quick,
+        "queue_cap": queue_cap,
+        "window": 10,
+        "rows": rows,
+        "loss": loss,
+        "wait_ratio_attention_vs_mlp": {
+            name: round(w["attention"] / max(w["mlp"], 1e-9), 4)
+            for name, w in waits.items()},
+    }
+    save_json("queue_encoder_ab", out)
+    if baseline_path:
+        # Curated contract: schema + both modules' loss-decreased flags +
+        # the deterministic metric columns of every row (direction-aware
+        # in check_bench: wait/slowdown may only rise rtol above the
+        # baseline, util_* may only drop rtol below it).
+        contract = {
+            "bench": out["bench"],
+            "schema": out["schema"],
+            "smoke": out["smoke"],
+            "queue_cap": out["queue_cap"],
+            "loss": {m: {"decreased": loss[m]["decreased"]} for m in loss},
+            "rows": [{k: row[k] for k in
+                      ("method", "scenario", "avg_wait",
+                       "avg_bounded_slowdown", "util_node", "n_jobs")}
+                     for row in rows],
+        }
+        os.makedirs(os.path.dirname(baseline_path), exist_ok=True)
+        with open(baseline_path, "w") as f:
+            json.dump(contract, f, indent=1)
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI sizing (shortest traces, smallest queue cap)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="also refresh the committed "
+                         "benchmarks/baselines/queue_encoder_ab.json")
+    args = ap.parse_args()
+    o = run(quick=not args.full, seed=args.seed, smoke=args.smoke,
+            baseline_path=os.path.join(BASELINE_DIR, "queue_encoder_ab.json")
+            if args.update_baseline else None)
+    for row in o["rows"]:
+        print(f"{row['method']:>9} {row['scenario']:<22} "
+              f"wait={row['avg_wait']:.0f}s "
+              f"bslow={row['avg_bounded_slowdown']:.2f} "
+              f"trunc={row['truncated_jobs']:.0f}")
+    print("loss:", o["loss"])
+    print("wait ratio (attention/mlp):", o["wait_ratio_attention_vs_mlp"])

@@ -48,6 +48,12 @@ def _derived(name, out) -> str:
         s = out["summary"]
         return (f"cells={s['n_cells']};wins="
                 + "/".join(f"{k}:{v}" for k, v in s["wins"].items()))
+    if name == "queue_encoder_ab":
+        ratios = out["wait_ratio_attention_vs_mlp"]
+        trained = out["loss"]["attention"]["decreased"]
+        return (f"attn_trains={'PASS' if trained else 'FAIL'};"
+                + ";".join(f"{k.split('-')[-1]}_wait_ratio={v:.2f}"
+                           for k, v in ratios.items()))
     if name == "state_module_fig3":
         if "kiviat" in out:
             k = out["kiviat"]
@@ -126,14 +132,16 @@ def main(argv=None) -> int:
     quick = not args.full
 
     from . import (bench_curriculum, bench_goal_adaptation, bench_overhead,
-                   bench_roofline, bench_scheduling, bench_serving,
-                   bench_state_module, bench_three_resource)
+                   bench_queue_encoder, bench_roofline, bench_scheduling,
+                   bench_serving, bench_state_module, bench_three_resource)
 
     benches = {
         "overhead_vF": lambda: bench_overhead.run(quick=quick),
         "roofline_g": lambda: bench_roofline.run(quick=quick),
         "state_module_fig3": lambda: bench_state_module.run(
             quick=quick, backend=args.backend),
+        "queue_encoder_ab": lambda: bench_queue_encoder.run(
+            quick=quick, smoke=quick),
         "curriculum_fig4": lambda: bench_curriculum.run(
             quick=quick, backend=args.backend),
         "scheduling_fig5_6_7": lambda: bench_scheduling.run(

@@ -35,6 +35,10 @@ import numpy as np
 from ..nn.backend import mlp_forward, resolve_backend
 from ..nn.modules import (conv1d_apply, conv1d_init, dense_apply, dense_init,
                           leaky_relu, mlp_init)
+from ..nn.queue_encoder import (QueueEncoderConfig, queue_encoder_init,
+                                queue_state_features)
+
+STATE_MODULES = ("mlp", "cnn", "attention")
 
 
 @dataclass(frozen=True)
@@ -49,13 +53,32 @@ class DFPConfig:
     module_hidden: int = 128                  # measurement/goal modules
     stream_hidden: int = 512
     state_module: str = "mlp"                 # "mlp" | "cnn" (Fig. 3 ablation)
+    #                                           | "attention" (queue encoder)
     cnn_channels: Tuple[int, ...] = (8, 16)
     cnn_width: int = 9
     cnn_stride: int = 4
+    # Queue-as-tokens attention state module (repro.nn.queue_encoder) —
+    # only read when state_module == "attention".
+    attn_queue: int = 128                     # Q: job-token buffer size
+    attn_dim: int = 64                        # d_model
+    attn_heads: int = 4
+    attn_layers: int = 2
+    attn_mlp_mult: int = 2
     backend: str = "xla"                      # "xla" | "pallas" (fused kernel)
 
     def __post_init__(self):
         resolve_backend(self.backend)
+        if self.state_module not in STATE_MODULES:
+            raise ValueError(f"unknown state_module {self.state_module!r}; "
+                             f"expected one of {STATE_MODULES}")
+        if self.state_module == "attention":
+            expect = (self.attn_queue * (self.n_measurements + 2) + 1
+                      + 2 * self.n_measurements)
+            if self.state_dim != expect:
+                raise ValueError(
+                    f"attention state_dim mismatch: got {self.state_dim}, "
+                    f"layout Q*(M+2)+1+2M = {expect} for "
+                    f"attn_queue={self.attn_queue} M={self.n_measurements}")
 
     @property
     def n_offsets(self) -> int:
@@ -65,6 +88,21 @@ class DFPConfig:
     def pred_dim(self) -> int:
         return self.n_offsets * self.n_measurements
 
+    @property
+    def queue_encoder(self) -> QueueEncoderConfig:
+        """Encoder architecture derived from the DFP shape contract."""
+        return QueueEncoderConfig(
+            queue_cap=self.attn_queue,
+            job_dim=self.n_measurements + 2,
+            ctx_dim=2 * self.n_measurements,
+            window=self.n_actions,
+            d_model=self.attn_dim,
+            n_heads=self.attn_heads,
+            n_layers=self.attn_layers,
+            mlp_mult=self.attn_mlp_mult,
+            out_dim=self.state_out,
+        )
+
 
 def init_params(key: jax.Array, cfg: DFPConfig):
     ks = jax.random.split(key, 8)
@@ -72,6 +110,8 @@ def init_params(key: jax.Array, cfg: DFPConfig):
     if cfg.state_module == "mlp":
         sizes = [cfg.state_dim, *cfg.state_hidden, cfg.state_out]
         params["state"] = mlp_init(ks[0], sizes)
+    elif cfg.state_module == "attention":
+        params["state"] = queue_encoder_init(ks[0], cfg.queue_encoder)
     else:  # CNN ablation: 1-D convs over the state vector.
         convs = []
         in_ch = 1
@@ -103,6 +143,9 @@ def _state_features(params, cfg: DFPConfig, state: jnp.ndarray) -> jnp.ndarray:
     if cfg.state_module == "mlp":
         return mlp_forward(params["state"], state,
                            final_activation="leaky_relu", backend=cfg.backend)
+    if cfg.state_module == "attention":
+        return queue_state_features(params["state"], cfg.queue_encoder,
+                                    state, backend=cfg.backend)
     # CNN ablation stays on plain XLA ops (conv has no fused kernel).
     x = state[..., :, None]                       # (B, L, 1)
     for conv in params["state"]["convs"]:

@@ -49,6 +49,12 @@ class TrainConfig:
     #                                  "xla" | "pallas" re-routes the agent
     #                                  via set_backend (persists after the
     #                                  run; fused-MLP Pallas kernel)
+    state_module: Optional[str] = None  # None -> keep the agent's module;
+    #                                  anything else must MATCH it (the
+    #                                  parameter trees differ across
+    #                                  modules, so it cannot be switched
+    #                                  on a live agent — build the agent
+    #                                  with the right AgentConfig instead)
     verbose: bool = False
 
 
@@ -170,6 +176,14 @@ def train_agent_vectorized(agent: MRSchAgent, slots: Sequence[EnvSlot],
     log = TrainLog()
     if config.backend is not None:
         agent.set_backend(config.backend)
+    if (config.state_module is not None
+            and config.state_module != agent.config.state_module):
+        raise ValueError(
+            f"TrainConfig.state_module={config.state_module!r} does not "
+            f"match the agent's {agent.config.state_module!r}: state-module "
+            "parameter trees are structurally different, so the module "
+            "cannot be swapped on a live agent — construct the agent with "
+            "AgentConfig(state_module=...) instead")
     lanes = [s for s in slots if s.jobsets]
     if not lanes:
         return log

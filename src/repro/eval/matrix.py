@@ -44,7 +44,9 @@ MATRIX_SCHEMA = "mrsch.eval.matrix/v1"
 CORE_COLUMNS = ("policy", "scenario", "family", "drift", "seed",
                 "decisions", "n_unstarted")
 METRIC_COLUMNS = ("avg_wait", "avg_slowdown", "avg_bounded_slowdown",
-                  "p95_wait", "max_wait", "n_jobs", "makespan")
+                  "p95_wait", "max_wait", "n_jobs", "makespan",
+                  "truncated_jobs")  # appended last: committed baselines
+#                                      prefix-compare their column list
 
 PolicyFactory = Callable[[], object]
 

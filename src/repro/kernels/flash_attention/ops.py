@@ -11,7 +11,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from .kernel import flash_attention_kernel
+from .kernel import flash_attention_kernel, mha_bwd_kernels, mha_fwd_kernel
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
@@ -42,3 +42,87 @@ def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
                                  interpret=interpret)
     out = out[:, :Sq]
     return out.reshape(B, H, Sq, dh).transpose(0, 2, 1, 3)
+
+
+# ------------------------------------------------------------ masked mha
+# Differentiable non-causal attention over per-row variable-length token
+# sets — the hot path of the queue-as-tokens state encoder
+# (repro.nn.queue_encoder).  Mirrors fused_mlp/ops.py: a custom_vjp whose
+# forward and backward both run Pallas kernels, padding handled inside
+# the vjp boundary, interpret-mode fallback off TPU.
+
+def _pad_seq(x, mult: int):
+    pad = (-x.shape[1]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[1] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def default_interpret() -> bool:
+    """Interpret-mode unless a real TPU is attached (fused_mlp semantics)."""
+    return jax.default_backend() != "tpu"
+
+
+def _mha_fwd_impl(q, k, v, lengths, block_q, block_k, interpret):
+    Sq = q.shape[1]
+    o, lse = mha_fwd_kernel(
+        _pad_seq(q, block_q), _pad_seq(k, block_k), _pad_seq(v, block_k),
+        lengths, block_q=block_q, block_k=block_k, interpret=interpret)
+    return o[:, :Sq], lse[:, :Sq]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6))
+def _mha(q, k, v, lengths, block_q, block_k, interpret):
+    return _mha_fwd_impl(q, k, v, lengths, block_q, block_k, interpret)[0]
+
+
+def _mha_fwd(q, k, v, lengths, block_q, block_k, interpret):
+    o, lse = _mha_fwd_impl(q, k, v, lengths, block_q, block_k, interpret)
+    return o, (q, k, v, lengths, o, lse)
+
+
+def _mha_bwd(block_q, block_k, interpret, res, do):
+    q, k, v, lengths, o, lse = res
+    Sq, Sk = q.shape[1], k.shape[1]
+    # delta = rowsum(do * o): the softmax-jacobian correction, computed
+    # once host-graph-side instead of inside both backward kernels.
+    delta = (do.astype(jnp.float32) * o.astype(jnp.float32)).sum(axis=-1)
+    dq, dk, dv = mha_bwd_kernels(
+        _pad_seq(q, block_q), _pad_seq(k, block_k), _pad_seq(v, block_k),
+        _pad_seq(do, block_q), _pad_seq(lse, block_q),
+        _pad_seq(delta, block_q), lengths,
+        block_q=block_q, block_k=block_k, interpret=interpret)
+    # lengths ride through as a float array (custom_vjp nondiff_argnums
+    # cannot carry traced arrays) — their cotangent is defined as zero.
+    return (dq[:, :Sq], dk[:, :Sk], dv[:, :Sk], jnp.zeros_like(lengths))
+
+
+_mha.defvjp(_mha_fwd, _mha_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_k",
+                                             "interpret"))
+def mha(q, k, v, lengths=None, *, block_q: int = 128, block_k: int = 128,
+        interpret: bool | None = None):
+    """Masked non-causal flash attention, differentiable in q/k/v.
+
+    q (BH, Sq, dh), k/v (BH, Sk, dh); ``lengths`` (BH,) — valid KV tokens
+    per batch-head row (keys at positions >= length are masked out; a
+    fully-masked row outputs exactly 0, matching ``ref.attention_ref``
+    with lengths).  ``None`` means every key is valid.  The backward pass
+    runs the fused dq/dkv Pallas kernels via ``jax.custom_vjp``;
+    ``interpret=None`` auto-selects interpret mode off TPU.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    BH, _, _ = q.shape
+    Sk = k.shape[1]
+    if lengths is None:
+        lens = jnp.full((BH,), float(Sk), jnp.float32)
+    else:
+        lens = jnp.minimum(lengths.astype(jnp.float32), float(Sk))
+    return _mha(q.astype(jnp.float32), k.astype(jnp.float32),
+                v.astype(jnp.float32), lens, block_q, block_k,
+                bool(interpret))

@@ -5,14 +5,27 @@ import jax
 import jax.numpy as jnp
 
 
-def attention_ref(q, k, v, causal: bool = True):
-    """q (BH, Sq, dh), k/v (BH, Sk, dh)."""
+def attention_ref(q, k, v, causal: bool = True, lengths=None):
+    """q (BH, Sq, dh), k/v (BH, Sk, dh).
+
+    ``lengths`` (BH,), when given, masks keys at positions >= length per
+    batch-head row; a row with length 0 outputs exactly 0 (the masked
+    softmax weights are zeroed, not left uniform) — the contract the
+    Pallas ``mha`` kernels are parity-tested against.
+    """
     scale = q.shape[-1] ** -0.5
+    Sk = k.shape[1]
     s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
                    k.astype(jnp.float32)) * scale
+    kmask = None
+    if lengths is not None:
+        kmask = jnp.arange(Sk)[None, None, :] < lengths[:, None, None]
+        s = jnp.where(kmask, s, -1e30)
     if causal:
-        Sq, Sk = s.shape[-2], s.shape[-1]
+        Sq = s.shape[-2]
         mask = jnp.arange(Sq)[:, None] >= jnp.arange(Sk)[None, :]
         s = jnp.where(mask, s, -1e30)
     w = jax.nn.softmax(s, axis=-1)
+    if kmask is not None:
+        w = jnp.where(kmask, w, 0.0)
     return jnp.einsum("bqk,bkd->bqd", w, v.astype(jnp.float32)).astype(q.dtype)

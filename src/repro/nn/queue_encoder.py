@@ -1,0 +1,208 @@
+"""Queue-as-tokens attention state encoder (ROADMAP: set encoder over the
+*entire* job queue).
+
+The paper's §IV-B state vector caps observation at the first W queued
+jobs.  This module removes the cap: every waiting job (up to a generous
+``queue_cap``) becomes one token of per-job features, the cluster
+context (free fractions + mean time-to-free per resource) is injected as
+an always-valid token 0, and a small pre-norm transformer stack runs
+non-causal attention masked to the true queue length — on the
+``"pallas"`` backend through the flash-attention kernel with its fused
+custom-VJP backward (``repro.kernels.flash_attention.ops.mha``), on
+``"xla"`` through the dense masked reference.
+
+Pooling into the DFP state vector keeps both halves of the story:
+
+* permutation-equivariant summary — the context-token output plus the
+  masked mean over job tokens sees the WHOLE queue and is invariant to
+  how much padding the buffer carries;
+* slot identity — the first W job-token embeddings are read out
+  positionally (zeroed where invalid), because the DFP action stream
+  scores exactly those window slots and must know which token sits in
+  which slot.
+
+Token features, queue length and context features are laid out flat in
+the state vector by ``repro.core.encoding`` (``state_module ==
+"attention"``); this module only consumes that layout.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.flash_attention.ops import mha
+from ..kernels.flash_attention.ref import attention_ref
+from .backend import dense_forward, resolve_backend
+from .modules import Params, dense_init, mlp_init
+
+LN_EPS = 1e-5
+
+
+@dataclass(frozen=True)
+class QueueEncoderConfig:
+    """Static architecture of the queue encoder.
+
+    ``queue_cap`` (Q) is the padded token-buffer size; parameters do NOT
+    depend on it, so the same checkpoint runs under any buffer size (the
+    padding-invariance property test pins this).  ``window`` (W) is how
+    many leading job tokens are read out positionally for the action
+    slots — the simulation window.
+    """
+    queue_cap: int               # Q: job-token buffer size
+    job_dim: int                 # per-job feature width (R + 2)
+    ctx_dim: int                 # context-token feature width (2R)
+    window: int                  # W: positional read-out slots
+    d_model: int = 64
+    n_heads: int = 4
+    n_layers: int = 2
+    mlp_mult: int = 2
+    out_dim: int = 512           # DFP state-feature width
+
+    def __post_init__(self):
+        if self.d_model % self.n_heads:
+            raise ValueError(f"d_model {self.d_model} not divisible by "
+                             f"n_heads {self.n_heads}")
+        if self.queue_cap < self.window:
+            raise ValueError(f"queue_cap {self.queue_cap} < window "
+                             f"{self.window}: the window slots are the "
+                             "leading queue tokens")
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+
+def _ln_init(dim: int) -> Params:
+    return {"scale": jnp.ones((dim,), jnp.float32),
+            "bias": jnp.zeros((dim,), jnp.float32)}
+
+
+def _ln(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    mu = x.mean(axis=-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + LN_EPS) * p["scale"] + p["bias"]
+
+
+def queue_encoder_init(key: jax.Array, cfg: QueueEncoderConfig) -> Params:
+    d = cfg.d_model
+    ks = jax.random.split(key, 4 + cfg.n_layers)
+    blocks = []
+    for i in range(cfg.n_layers):
+        bk = jax.random.split(ks[4 + i], 5)
+        blocks.append({
+            "ln1": _ln_init(d),
+            "wq": dense_init(bk[0], d, d),
+            "wk": dense_init(bk[1], d, d),
+            "wv": dense_init(bk[2], d, d),
+            "wo": dense_init(bk[3], d, d),
+            "ln2": _ln_init(d),
+            "mlp": mlp_init(bk[4], [d, cfg.mlp_mult * d, d]),
+        })
+    return {
+        "tok": dense_init(ks[0], cfg.job_dim, d),
+        "ctx": dense_init(ks[1], cfg.ctx_dim, d),
+        "blocks": blocks,
+        "ln_f": _ln_init(d),
+        "out": dense_init(ks[2], d * (2 + cfg.window), cfg.out_dim),
+    }
+
+
+def _dense(layer: Params, x: jnp.ndarray, activation=None, *,
+           backend: str, interpret=None) -> jnp.ndarray:
+    """dense_forward over arbitrary leading dims (the fused kernel and
+    its padding logic are 2-D)."""
+    flat = x.reshape(-1, x.shape[-1])
+    y = dense_forward(layer, flat, activation, backend=backend,
+                      interpret=interpret)
+    return y.reshape(*x.shape[:-1], y.shape[-1])
+
+
+def _attend(q, k, v, lengths, *, backend: str, interpret=None):
+    """(B, S, H, hd) self-attention masked to per-batch lengths."""
+    B, S, H, hd = q.shape
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    lens = jnp.repeat(lengths, H)                     # b-major, h-minor
+    if backend == "pallas":
+        out = mha(qf, kf, vf, lens, interpret=interpret)
+    else:
+        out = attention_ref(qf, kf, vf, causal=False, lengths=lens)
+    return out.reshape(B, H, S, hd).transpose(0, 2, 1, 3)
+
+
+def encode_queue_tokens(params: Params, cfg: QueueEncoderConfig,
+                        tokens: jnp.ndarray, qlen: jnp.ndarray,
+                        ctx: jnp.ndarray, *, backend: str = "xla",
+                        interpret=None) -> jnp.ndarray:
+    """Per-token embeddings (B, 1 + Q, d_model); token 0 is the context.
+
+    ``tokens`` (B, Q, job_dim) zero-padded past the queue, ``qlen`` (B,)
+    true queue lengths, ``ctx`` (B, ctx_dim).  Attention keys are masked
+    to ``1 + qlen`` (context token always valid); queries are computed
+    for every slot, so a padded slot's embedding depends only on the
+    valid tokens — outputs over the valid region are invariant to
+    ``queue_cap`` padding and equivariant under permutations of the
+    valid tokens (both property-tested).
+    """
+    resolve_backend(backend)
+    B, Q, _ = tokens.shape
+    tok = _dense(params["tok"], tokens, backend=backend, interpret=interpret)
+    ctx_t = _dense(params["ctx"], ctx, backend=backend,
+                   interpret=interpret)[:, None]
+    x = jnp.concatenate([ctx_t, tok], axis=1)         # (B, S = 1 + Q, d)
+    S, H, hd = 1 + Q, cfg.n_heads, cfg.head_dim
+    lengths = qlen.astype(jnp.float32) + 1.0
+    for blk in params["blocks"]:
+        h = _ln(blk["ln1"], x)
+        qh = _dense(blk["wq"], h, backend=backend,
+                    interpret=interpret).reshape(B, S, H, hd)
+        kh = _dense(blk["wk"], h, backend=backend,
+                    interpret=interpret).reshape(B, S, H, hd)
+        vh = _dense(blk["wv"], h, backend=backend,
+                    interpret=interpret).reshape(B, S, H, hd)
+        a = _attend(qh, kh, vh, lengths, backend=backend,
+                    interpret=interpret)
+        x = x + _dense(blk["wo"], a.reshape(B, S, cfg.d_model),
+                       backend=backend, interpret=interpret)
+        h2 = _ln(blk["ln2"], x)
+        m = _dense(blk["mlp"]["layers"][0], h2, "leaky_relu",
+                   backend=backend, interpret=interpret)
+        x = x + _dense(blk["mlp"]["layers"][1], m, backend=backend,
+                       interpret=interpret)
+    return _ln(params["ln_f"], x)
+
+
+def queue_state_features(params: Params, cfg: QueueEncoderConfig,
+                         state: jnp.ndarray, *, backend: str = "xla",
+                         interpret=None) -> jnp.ndarray:
+    """Flat attention-layout state (..., state_dim) -> (..., out_dim).
+
+    State layout (``repro.core.encoding``, state_module="attention"):
+    ``[Q * job_dim tokens | queue_len | ctx (2R)]``.  Pooled feature =
+    [context-token output | masked mean over job tokens | first-W token
+    embeddings (zeroed where invalid)] -> dense -> leaky_relu.
+    """
+    Q, jd, W = cfg.queue_cap, cfg.job_dim, cfg.window
+    lead = state.shape[:-1]
+    flat = state.reshape(-1, state.shape[-1])
+    B = flat.shape[0]
+    tokens = flat[:, :Q * jd].reshape(B, Q, jd)
+    qlen = flat[:, Q * jd]
+    ctx = flat[:, Q * jd + 1:Q * jd + 1 + cfg.ctx_dim]
+    h = encode_queue_tokens(params, cfg, tokens, qlen, ctx,
+                            backend=backend, interpret=interpret)
+    hc = h[:, 0]                                       # (B, d)
+    jobs = h[:, 1:]                                    # (B, Q, d)
+    valid = (jnp.arange(Q, dtype=jnp.float32)[None, :]
+             < qlen[:, None]).astype(h.dtype)          # (B, Q)
+    mean = ((jobs * valid[..., None]).sum(axis=1)
+            / jnp.maximum(valid.sum(axis=1, keepdims=True), 1.0))
+    win = jobs[:, :W] * valid[:, :W, None]
+    feat = jnp.concatenate([hc, mean, win.reshape(B, W * cfg.d_model)],
+                           axis=-1)
+    y = _dense(params["out"], feat, "leaky_relu", backend=backend,
+               interpret=interpret)
+    return y.reshape(*lead, cfg.out_dim)

@@ -65,6 +65,8 @@ class DeviceLayout:
     backfill: bool
     requires_obs: bool
     time_scale: float
+    state_module: str = "mlp"        # mirrors EncodingConfig.state_module
+    queue_cap: int = 0               # Q, attention layout only
 
     @property
     def n_resources(self) -> int:
@@ -85,6 +87,9 @@ class DeviceLayout:
 
     @property
     def state_dim(self) -> int:
+        if self.state_module == "attention":
+            return (self.queue_cap * (self.n_resources + 2) + 1
+                    + 2 * self.n_resources)
         return self.window * (self.n_resources + 2) + 2 * int(sum(self.enc_caps))
 
 
@@ -351,6 +356,39 @@ def _easy_backfill(layout: DeviceLayout, arrays, st, free, need, waiting,
     return jax.lax.cond(bf_start.any(), assign_units, lambda st: st, st)
 
 
+def _meas_goal(layout: DeviceLayout, arrays, st, free, waiting):
+    """Measurement (utilization) + Eq. (1) goal, (N, R) each — the shared
+    tail of every packed decision row, module-independent."""
+    R = layout.n_resources
+    now = st["now"]
+    caps_f = jnp.asarray([max(c, 1) for c in layout.caps], jnp.float32)
+    meas = 1.0 - free / caps_f[None, :]
+    # Eq. (1) goal over the full waiting queue + running remainders.
+    running = st["started"] & ~st["finished"]
+    tw = (arrays["walltime"] * waiting
+          + jnp.maximum(st["est_end"] - now[:, None], 0.0) * running)
+    acc = jnp.einsum("nj,njr->nr", tw, arrays["demands"])
+    demand_time = acc / caps_f[None, :]
+    total = demand_time.sum(axis=1, keepdims=True)
+    goal = jnp.where(total > 0, demand_time / jnp.maximum(total, 1e-30),
+                     1.0 / R)
+    return meas, goal
+
+
+def _job_tokens(layout: DeviceLayout, st, win_feats, win_valid):
+    """Packed job slots -> [fracs(R), walltime_norm, queued_norm] tokens.
+
+    [fracs(R), walltime_norm] are static per job; the queued-time column
+    is derived from the packed raw submit times.  Invalid slots are
+    all-zero (``pack_window`` zero-fills their features)."""
+    R = layout.n_resources
+    ts = jnp.float32(layout.time_scale)
+    valid_f = win_valid.astype(jnp.float32)
+    queued = (st["now"][:, None] - win_feats[..., R + 1]) / ts * valid_f
+    return jnp.concatenate([win_feats[..., :R + 1], queued[..., None]],
+                           axis=-1)
+
+
 def _build_obs(layout: DeviceLayout, arrays, st, free, waiting, win_feats,
                win_valid):
     """Packed decision rows [state | meas | goal | valid] in-graph,
@@ -359,11 +397,7 @@ def _build_obs(layout: DeviceLayout, arrays, st, free, waiting, win_feats,
     ts = jnp.float32(layout.time_scale)
     now = st["now"]
     valid_f = win_valid.astype(jnp.float32)
-    # Window section: [fracs(R), walltime_norm] are static per job; the
-    # queued-time column is derived from the packed raw submit times.
-    queued = (now[:, None] - win_feats[..., R + 1]) / ts * valid_f
-    win = jnp.concatenate([win_feats[..., :R + 1], queued[..., None]],
-                          axis=-1)
+    win = _job_tokens(layout, st, win_feats, win_valid)
     parts = [win.reshape(N, W * (R + 2))]
     # Unit sections use the encoding's reference section sizes; a cluster
     # with fewer units fills the leading slots (encode_state semantics).
@@ -384,18 +418,39 @@ def _build_obs(layout: DeviceLayout, arrays, st, free, waiting, win_feats,
             avail = jnp.concatenate([avail, zeros], axis=1)
             ttf = jnp.concatenate([ttf, zeros], axis=1)
         parts.extend([avail, ttf])
-    caps_f = jnp.asarray([max(c, 1) for c in layout.caps], jnp.float32)
-    meas = 1.0 - free / caps_f[None, :]
-    # Eq. (1) goal over the full waiting queue + running remainders.
-    running = st["started"] & ~st["finished"]
-    tw = (arrays["walltime"] * waiting
-          + jnp.maximum(st["est_end"] - now[:, None], 0.0) * running)
-    acc = jnp.einsum("nj,njr->nr", tw, arrays["demands"])
-    demand_time = acc / caps_f[None, :]
-    total = demand_time.sum(axis=1, keepdims=True)
-    goal = jnp.where(total > 0, demand_time / jnp.maximum(total, 1e-30),
-                     1.0 / R)
+    meas, goal = _meas_goal(layout, arrays, st, free, waiting)
     return jnp.concatenate(parts + [meas, goal, valid_f], axis=1)
+
+
+def _build_obs_attention(layout: DeviceLayout, arrays, st, free, waiting,
+                         q_feats, q_valid):
+    """Attention-layout decision rows, mirroring ``encoding.encode_state``
+    with ``state_module="attention"``:
+    ``[Q*(R+2) tokens | queue_len | 2R context | meas | goal | valid(W)]``.
+    ``q_feats``/``q_valid`` pack the first ``queue_cap`` waiting jobs; the
+    leading W slots are exactly the action window."""
+    N, R, W = layout.n_envs, layout.n_resources, layout.window
+    Q = layout.queue_cap
+    ts = jnp.float32(layout.time_scale)
+    now = st["now"]
+    tok = _job_tokens(layout, st, q_feats, q_valid)
+    qlen = jnp.minimum(waiting.sum(axis=1), float(Q))
+    ctx_cols = []
+    for r, (off, cap) in enumerate(layout.segments):
+        seg = st["release"][:, off:off + cap]
+        busy = seg > 0.0
+        nb = busy.sum(axis=1).astype(jnp.float32)
+        ctx_cols.append(1.0 - nb / float(max(cap, 1)))       # free fraction
+        ttf_sum = jnp.where(busy,
+                            jnp.maximum(seg - now[:, None], 0.0),
+                            0.0).sum(axis=1)
+        ctx_cols.append(jnp.where(nb > 0, ttf_sum / jnp.maximum(nb, 1.0), 0.0)
+                        / ts)                                # mean time-to-free
+    meas, goal = _meas_goal(layout, arrays, st, free, waiting)
+    return jnp.concatenate(
+        [tok.reshape(N, Q * (R + 2)), qlen[:, None],
+         jnp.stack(ctx_cols, axis=1), meas, goal,
+         q_valid[:, :W].astype(jnp.float32)], axis=1)
 
 
 def _device_rollout(layout: DeviceLayout, score_fn, explore: bool,
@@ -417,6 +472,7 @@ def _device_rollout(layout: DeviceLayout, score_fn, explore: bool,
         "in_pass": jnp.zeros(N, bool),
         "done": jnp.zeros(N, bool),
         "decisions": jnp.zeros(N, jnp.int32),
+        "truncated": jnp.zeros(N, jnp.int32),
         "first_start": jnp.full(N, jnp.inf, jnp.float32),
         "key": key,
     }
@@ -431,14 +487,30 @@ def _device_rollout(layout: DeviceLayout, score_fn, explore: bool,
         now = s["now"]
         arrived = jidx[None, :] < s["n_arrived"][:, None]
         waiting = (arrived & ~s["started"]).astype(jnp.float32)
-        need = s["in_pass"] & (waiting.sum(axis=1) > 0) & ~s["done"]
+        n_waiting = waiting.sum(axis=1)
+        need = s["in_pass"] & (n_waiting > 0) & ~s["done"]
         free = _segment_free(layout, s["release"])
-        win_feats, win_idx, win_valid = pack_window(waiting, feats, window=W)
-        if layout.requires_obs:
-            obs = _build_obs(layout, arrays, s, free, waiting, win_feats,
-                             win_valid)
-        else:
+        # The attention module observes the first queue_cap waiting jobs;
+        # one pack covers both the Q-token state and (its leading W
+        # slots) the action window.
+        attention = layout.state_module == "attention"
+        K = layout.queue_cap if attention else W
+        pk_feats, pk_idx, pk_valid = pack_window(waiting, feats, window=K)
+        win_idx, win_valid = pk_idx[:, :W], pk_valid[:, :W]
+        if not layout.requires_obs:
             obs = win_valid.astype(jnp.float32)
+        elif attention:
+            obs = _build_obs_attention(layout, arrays, s, free, waiting,
+                                       pk_feats, pk_valid)
+        else:
+            obs = _build_obs(layout, arrays, s, free, waiting, pk_feats,
+                             pk_valid)
+        # Jobs a host Simulator would drop from the observable window this
+        # decision (ScheduleMetrics.truncated_jobs; the attention module
+        # still reports window truncation so the A/B comparison reads the
+        # same pressure signal for both modules).
+        overflow = jnp.maximum(n_waiting - float(W), 0.0).astype(jnp.int32)
+        s = {**s, "truncated": s["truncated"] + need * overflow}
         scores = score_fn(policy_state, obs)[:, :W]
         masked = jnp.where(win_valid, scores, -INF)
         a = jnp.argmax(masked, axis=1).astype(jnp.int32)
@@ -509,6 +581,7 @@ def _device_rollout(layout: DeviceLayout, score_fn, explore: bool,
         round_body, st, None, length=layout.rounds)
     out = {"started": st["started"], "start": st["start"], "end": st["end"],
            "now": st["now"], "decisions": st["decisions"],
+           "truncated": st["truncated"],
            "first_start": st["first_start"], "done": st["done"],
            "actions": actions, "decided": decided}
     if collect:
@@ -562,9 +635,13 @@ class DeviceSimulator:
                     "exactly the simulation window")
             enc_caps = tuple(int(c) for c in enc.capacities)
             time_scale = float(enc.time_scale)
+            state_module = str(getattr(enc, "state_module", "mlp"))
+            queue_cap = int(getattr(enc, "queue_cap", 0))
         else:
             enc_caps = caps
             time_scale = 86400.0
+            state_module = "mlp"
+            queue_cap = 0
 
         self.jobsets = [sorted((j.copy() for j in js),
                                key=lambda j: (j.submit, j.jid))
@@ -578,7 +655,8 @@ class DeviceSimulator:
             names=names, caps=caps, enc_caps=enc_caps,
             window=int(self.config.window), n_envs=N, n_jobs=J,
             rounds=rounds, backfill=bool(self.config.backfill),
-            requires_obs=requires_obs, time_scale=time_scale)
+            requires_obs=requires_obs, time_scale=time_scale,
+            state_module=state_module, queue_cap=queue_cap)
         self.arrays = self._pack(self.jobsets)
         self.stats = DeviceStats()
         self._jitted: Dict[Tuple[bool, bool], object] = {}
@@ -682,12 +760,15 @@ class DeviceSimulator:
                 acc.busy_area[n] = float(sum(
                     jb.demands.get(n, 0) * (jb.end - jb.start)
                     for jb in started))
+            metrics = acc.summarize(started)
+            metrics.truncated_jobs = int(out["truncated"][i])
             results.append(SimResult(
-                metrics=acc.summarize(started),
+                metrics=metrics,
                 jobs=jobs,
                 makespan=float(out["now"][i]),
                 decisions=int(out["decisions"][i]),
-                n_unstarted=len(jobs) - len(started)))
+                n_unstarted=len(jobs) - len(started),
+                truncated_jobs=int(out["truncated"][i])))
         return results
 
 

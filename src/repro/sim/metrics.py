@@ -24,6 +24,9 @@ class ScheduleMetrics:
     max_wait: float
     n_jobs: int
     makespan: float
+    truncated_jobs: int = 0   # waiting jobs beyond the observable window,
+    #                           summed over decisions (set by the engines,
+    #                           not by MetricsAccumulator.summarize)
 
     def as_row(self) -> Dict[str, float]:
         """Flat CSV/JSON row: every scalar field plus one util_<name>
@@ -37,6 +40,7 @@ class ScheduleMetrics:
             max_wait=self.max_wait,
             n_jobs=self.n_jobs,
             makespan=self.makespan,
+            truncated_jobs=self.truncated_jobs,
         )
         return row
 

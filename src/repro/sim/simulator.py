@@ -113,6 +113,9 @@ class SimResult:
     makespan: float
     decisions: int
     n_unstarted: int = 0         # jobs still waiting when events drained
+    truncated_jobs: int = 0      # waiting jobs beyond the observable window,
+    #                              summed over decisions (queue pressure the
+    #                              classic W-window encoding cannot see)
 
     @property
     def started_jobs(self) -> List[Job]:
@@ -131,6 +134,7 @@ class Simulator:
         self._eseq = itertools.count()
         self.now = 0.0
         self.decisions = 0
+        self.truncated = 0
         self.acc = MetricsAccumulator(self.cluster)
         self._started = False
         self._in_pass = False     # inside a scheduling pass awaiting decisions
@@ -200,6 +204,7 @@ class Simulator:
         ctx = self._pending_ctx if self._pending_ctx is not None else self._ctx()
         self._pending_ctx = None
         self.decisions += 1
+        self.truncated += max(ctx.queue_len - len(ctx.window), 0)
         a = max(0, min(int(action), len(ctx.window) - 1))
         job = ctx.window[a]
         if self.cluster.fits(job):
@@ -224,12 +229,15 @@ class Simulator:
         so starvation cannot pass silently.
         """
         started = [j for j in self.jobs if j.started]
+        metrics = self.acc.summarize(started)
+        metrics.truncated_jobs = self.truncated
         return SimResult(
-            metrics=self.acc.summarize(started),
+            metrics=metrics,
             jobs=list(self.jobs),
             makespan=self.now,
             decisions=self.decisions,
             n_unstarted=len(self.jobs) - len(started),
+            truncated_jobs=self.truncated,
         )
 
     # ------------------------------------------------------------ main loop

@@ -159,6 +159,43 @@ def _bursty(cfg: ThetaConfig, seed: int, campaign_mean: float = 8.0,
     return out
 
 
+def _flood(cfg: ThetaConfig, seed: int, span_s: float = 1800.0) -> List[Job]:
+    """Queue flood: the whole trace submits within ``span_s`` seconds.
+
+    Re-times the base trace's submits uniformly into a short span, so
+    the waiting queue holds hundreds of jobs at once from the first
+    scheduling pass — the regime where the classic W-window encoding is
+    blind to nearly all of the backlog (``truncated_jobs`` explodes) and
+    the queue-as-tokens attention encoder has signal to exploit.
+    """
+    jobs = generate_trace(_reseeded(cfg, seed))
+    rng = np.random.default_rng(2000 + seed)
+    t0 = min(j.submit for j in jobs) if jobs else 0.0
+    out = []
+    for j, dt in zip(jobs, rng.uniform(0.0, span_s, len(jobs))):
+        nj = j.copy()
+        nj.submit = t0 + float(dt)
+        out.append(nj)
+    return sorted(out, key=lambda j: (j.submit, j.jid))
+
+
+def _compressed(cfg: ThetaConfig, seed: int, factor: float = 6.0) -> List[Job]:
+    """Sustained oversubscription: submit times compressed ``factor``x.
+
+    Unlike the one-shot flood, arrivals keep their relative pattern —
+    the queue builds steadily to a deep sustained backlog instead of one
+    spike, exercising long-queue dynamics across the whole trace.
+    """
+    jobs = generate_trace(_reseeded(cfg, seed))
+    t0 = min(j.submit for j in jobs) if jobs else 0.0
+    out = []
+    for j in jobs:
+        nj = j.copy()
+        nj.submit = t0 + (j.submit - t0) / factor
+        out.append(nj)
+    return sorted(out, key=lambda j: (j.submit, j.jid))
+
+
 _SKEW_SMALL = (0.30, 0.24, 0.18, 0.12, 0.07, 0.04, 0.03, 0.01, 0.007, 0.003)
 _SKEW_LARGE = (0.02, 0.03, 0.04, 0.05, 0.08, 0.12, 0.18, 0.22, 0.16, 0.10)
 
@@ -221,6 +258,16 @@ def _register_defaults() -> None:
         description="Campaign submissions: geometric bursts (~8 jobs, "
                     "~2 min spacing) separated by long idle gaps",
         tags=("synthetic", "arrival")))
+    register(ScenarioSpec(
+        name="huge-queue-flood", family="synthetic", build=_flood,
+        description="Whole trace submitted within 30 min: hundreds of "
+                    "jobs waiting at once (window truncation stress)",
+        tags=("synthetic", "huge-queue", "arrival")))
+    register(ScenarioSpec(
+        name="huge-queue-sustained", family="synthetic", build=_compressed,
+        description="Submit times compressed 6x: sustained deep backlog "
+                    "for the full trace span",
+        tags=("synthetic", "huge-queue", "arrival")))
     register(ScenarioSpec(
         name="size-skew-small", family="synthetic", build=_size_skew,
         params={"weights": _SKEW_SMALL},

@@ -4,7 +4,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ops import flash_attention, mha
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.fused_mlp.ops import fused_mlp
 from repro.kernels.fused_mlp.ref import fused_mlp_layer_ref
@@ -159,6 +159,80 @@ def test_flash_attention_cross_lengths():
     ref = attention_ref(qf, kf, vf, causal=False).reshape(2, 4, 100, 64)
     np.testing.assert_allclose(np.asarray(out),
                                np.asarray(ref.transpose(0, 2, 1, 3)),
+                               rtol=2e-4, atol=2e-4)
+
+
+# ----------------------------------------------------- masked mha (+ vjp)
+# The queue-as-tokens encoder's kernel: non-causal attention over
+# variable-length token sets, with a fused Pallas backward.  Shapes are
+# the encoder's real ones — S = 1 + queue_cap, which is deliberately odd
+# and no multiple of any block size — and the length grids always include
+# 0 (an env with an empty queue: a fully-masked tail must output and
+# backprop exactly zero, not NaN).
+
+def _mha_case(S, dh, seed=0, BH=8):
+    key = jax.random.PRNGKey(seed)
+    q = jax.random.normal(key, (BH, S, dh))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (BH, S, dh))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (BH, S, dh))
+    lens = jnp.asarray([0, 1, 3, S // 2, max(S - 1, 1), S, 2, S // 3][:BH],
+                       jnp.float32)
+    return q, k, v, lens
+
+
+# S = 1 + Q for queue caps 48 / 128 / 64 (none block-aligned); block 128
+# exercises the single-block fast path, 32/64 the multi-block online
+# softmax across partially- and fully-masked key blocks.
+MHA_SHAPES = [(49, 16, 32), (129, 32, 64), (65, 8, 128)]
+
+
+@pytest.mark.parametrize("S,dh,block", MHA_SHAPES)
+def test_mha_fwd_matches_ref(S, dh, block):
+    q, k, v, lens = _mha_case(S, dh, seed=S)
+    out = mha(q, k, v, lens, block_q=block, block_k=block, interpret=True)
+    ref = attention_ref(q, k, v, causal=False, lengths=lens)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("S,dh,block", MHA_SHAPES)
+def test_mha_vjp_matches_ref(S, dh, block):
+    q, k, v, lens = _mha_case(S, dh, seed=S + 1)
+    ct = jnp.sin(jnp.arange(S * dh) * 0.13).reshape(1, S, dh)
+
+    def proj(f):
+        return jax.grad(lambda q, k, v: (f(q, k, v) * ct).sum(), (0, 1, 2))(
+            q, k, v)
+
+    gk = proj(lambda q, k, v: mha(q, k, v, lens, block_q=block,
+                                  block_k=block, interpret=True))
+    gr = proj(lambda q, k, v: attention_ref(q, k, v, causal=False,
+                                            lengths=lens))
+    for got, ref, name in zip(gk, gr, ("dq", "dk", "dv")):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=1e-3, atol=1e-4, err_msg=name)
+
+
+def test_mha_fully_masked_is_exactly_zero():
+    """length 0 everywhere: outputs AND all gradients are exactly 0."""
+    q, k, v, _ = _mha_case(33, 8, seed=5)
+    lens = jnp.zeros((8,), jnp.float32)
+    out = mha(q, k, v, lens, block_q=32, block_k=32, interpret=True)
+    assert np.all(np.asarray(out) == 0.0)
+    grads = jax.grad(lambda q, k, v: mha(q, k, v, lens, block_q=32,
+                                         block_k=32, interpret=True).sum(),
+                     (0, 1, 2))(q, k, v)
+    for g, name in zip(grads, ("dq", "dk", "dv")):
+        arr = np.asarray(g)
+        assert np.isfinite(arr).all(), f"{name} has non-finite entries"
+        np.testing.assert_array_equal(arr, 0.0, err_msg=name)
+
+
+def test_mha_no_lengths_is_dense_attention():
+    q, k, v, _ = _mha_case(40, 16, seed=9)
+    out = mha(q, k, v, block_q=32, block_k=32, interpret=True)
+    ref = attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                rtol=2e-4, atol=2e-4)
 
 

@@ -156,6 +156,33 @@ def test_metrics_as_row_covers_every_field():
     assert len(row) == len(dataclasses.fields(ScheduleMetrics)) - 1 + 2
 
 
+def test_truncated_jobs_counts_queue_beyond_window():
+    """Regression pin for ``truncated_jobs``: waiting jobs the W-window
+    encoding cannot see, summed over decisions, identical across engines.
+
+    Six full-machine jobs all submit at t=0 with window=2, so exactly one
+    runs at a time and every decision point is deterministic.  Each
+    event yields one decision with k jobs waiting (truncated k-2), then a
+    follow-up decision after one start with k-1 waiting (truncated k-3):
+    (4+3) + (3+2) + (2+1) + (1+0) + (0+0) + 0 = 16.
+    """
+    from repro.sim import run_traces, run_traces_device
+
+    jobs = [Job(jid=i, submit=0.0, runtime=100.0, walltime=100.0,
+                demands={"node": 4}) for i in range(6)]
+    res = [ResourceSpec("node", 4)]
+    seq = run_trace(res, jobs, FCFSPolicy(), window=2)
+    assert seq.truncated_jobs == 16
+    assert seq.metrics.truncated_jobs == 16
+    assert seq.metrics.as_row()["truncated_jobs"] == 16
+    vec = run_traces(res, [jobs], FCFSPolicy(), window=2)[0]
+    dev = run_traces_device(res, [jobs], FCFSPolicy(),
+                            SimConfig.for_engine("device", window=2))[0]
+    assert vec.truncated_jobs == dev.truncated_jobs == 16
+    # A window wide enough for the whole trace truncates nothing.
+    assert run_trace(res, jobs, FCFSPolicy(), window=8).truncated_jobs == 0
+
+
 @pytest.mark.slow
 @settings(max_examples=20, deadline=None)
 @given(st.lists(
