@@ -22,7 +22,9 @@ policies on the vector engine and writes the schema-stable
 ``results/bench/matrix.json`` (+ ``.csv``).  ``--drift`` runs the §V-D
 adaptation experiment: a drifting trace split into phases, each policy
 walked through them via the lockstep refill hook, per-phase metrics in
-``results/bench/drift.json``.
+``results/bench/drift.json``.  ``--faults`` runs the job-lifecycle grid
+(workflow DAGs, requeue-on-failure, scheduled node drains) and writes the
+CI-gated ``results/bench/faults.json``.
 """
 from __future__ import annotations
 
@@ -95,10 +97,23 @@ def run_smoke(vector: int = 4, trials: int = 3, seed: int = 0):
     return out
 
 
-SMOKE_MATRIX = ("S2", "bursty-campaigns", "drift-bb-surge")
+SMOKE_MATRIX = ("S2", "bursty-campaigns", "drift-bb-surge",
+                "workflow-pipelines", "faulty-drain")
 FULL_MATRIX = ("S1", "S2", "S3", "S4", "S5", "theta-base", "diurnal-heavy",
                "bursty-campaigns", "size-skew-small", "size-skew-large",
-               "drift-bb-surge", "drift-arrival-ramp", "drift-node-shift")
+               "drift-bb-surge", "drift-arrival-ramp", "drift-node-shift",
+               "workflow-pipelines", "workflow-ensembles", "faulty-jobs",
+               "faulty-drain", "drift-failure-wave")
+
+# The lifecycle grid (--faults): workflow DAGs + requeue/fault scenarios,
+# gated in CI on the lifecycle metric columns (pipeline makespan may only
+# rise, completed-work fraction may only drop, per the direction-aware
+# check_bench patterns).
+FAULTS_GRID = ("workflow-pipelines", "workflow-ensembles", "faulty-jobs",
+               "faulty-drain")
+FAULTS_CELL_KEYS = ("decisions", "n_unstarted", "avg_wait", "makespan",
+                    "requeues", "n_failed", "failed_node_hours",
+                    "completed_work_frac", "pipeline_makespan")
 
 
 def _matrix_agent(res, seed: int = 0) -> MRSchAgent:
@@ -135,6 +150,61 @@ def summarize_matrix(matrix) -> str:
             f"{len(cfgm['seeds'])} seeds = {s['n_cells']} cells in "
             f"{s['wall_seconds']:.1f}s; wins={s['wins']} "
             f"-> {matrix.get('paths', {}).get('json', 'results/bench/matrix.json')}")
+
+
+def run_faults_bench(smoke: bool = True, vector: int = 4, seed: int = 0):
+    """Lifecycle smoke: workflow-DAG + fault-injection grid -> faults.json.
+
+    FCFS and the CI agent over the ``FAULTS_GRID`` scenarios on the
+    vector engine; cells are keyed (policy -> scenario -> metrics) rather
+    than row-ordered so the committed baseline stays insensitive to grid
+    growth.  The rows are deterministic for a seed: the gate catches a
+    lifecycle regression (lost requeues, broken dependency staging, work
+    accounting drift), not runner noise.
+    """
+    days, jobs_day = (0.6, 120) if smoke else (2.0, 220)
+    cfg, res = mini_setup(seed=seed, duration_days=days, jobs_per_day=jobs_day)
+    policies = {"FCFS": FCFSPolicy,
+                "MRSch": lambda: _matrix_agent(res, seed)}
+    mcfg = MatrixConfig(scenarios=FAULTS_GRID, seeds=(1,), vector=vector)
+    matrix = run_matrix(policies, res, cfg, mcfg)
+    cells: dict = {}
+    for r in matrix["rows"]:
+        cells.setdefault(r["policy"], {})[r["scenario"]] = {
+            k: r[k] for k in FAULTS_CELL_KEYS}
+    any_requeues = sum(c["requeues"] for by_s in cells.values()
+                       for s, c in by_s.items() if s.startswith("faulty"))
+    any_pipelines = all(c["pipeline_makespan"] > 0
+                        for by_s in cells.values()
+                        for s, c in by_s.items() if s.startswith("workflow"))
+    out = {
+        "schema": "mrsch.bench.faults/v1",
+        "grid": list(FAULTS_GRID),
+        "config": matrix["config"],
+        "cells": cells,
+        "summary": {
+            "n_cells": len(matrix["rows"]),
+            "faulty_scenarios_requeue": any_requeues > 0,
+            "workflow_scenarios_pipeline": any_pipelines,
+            "wall_seconds": matrix["summary"]["wall_seconds"],
+        },
+    }
+    save_json("faults", out)
+    return out
+
+
+def summarize_faults(out) -> str:
+    lines = [f"faults[{out['schema']}]: {out['summary']['n_cells']} cells, "
+             f"requeue={out['summary']['faulty_scenarios_requeue']} "
+             f"pipeline={out['summary']['workflow_scenarios_pipeline']} in "
+             f"{out['summary']['wall_seconds']:.1f}s"]
+    for policy, by_s in out["cells"].items():
+        for s, c in by_s.items():
+            lines.append(
+                f"  {policy}/{s}: requeues={c['requeues']} "
+                f"failed={c['n_failed']} frac={c['completed_work_frac']:.4f} "
+                f"pipeline_makespan={c['pipeline_makespan']:.0f}s")
+    return "\n".join(lines)
 
 
 def run_drift_bench(smoke: bool = True, scenario: str = "drift-bb-surge",
@@ -270,11 +340,17 @@ if __name__ == "__main__":
     ap.add_argument("--drift", action="store_true",
                     help="§V-D adaptation: per-phase metrics across a "
                          "mid-trace workload shift -> results/bench/drift.json")
+    ap.add_argument("--faults", action="store_true",
+                    help="lifecycle grid: workflow DAGs + fault injection "
+                         "-> results/bench/faults.json")
     args = ap.parse_args()
     if args.vector < 0:
         ap.error(f"--vector must be >= 0, got {args.vector}")
     if args.matrix:
         print(summarize_matrix(run_matrix_bench(smoke=args.smoke,
+                                                vector=args.vector or 4)))
+    elif args.faults:
+        print(summarize_faults(run_faults_bench(smoke=args.smoke,
                                                 vector=args.vector or 4)))
     elif args.drift:
         print(summarize_drift(run_drift_bench(smoke=args.smoke)))

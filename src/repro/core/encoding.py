@@ -32,7 +32,7 @@ from typing import List, Optional, Sequence
 
 import numpy as np
 
-from ..sim.cluster import Cluster
+from ..sim.cluster import TTF_HORIZON, Cluster
 from ..sim.job import Job
 from ..sim.simulator import SchedContext
 from .goal import ctx_goal
@@ -154,7 +154,9 @@ def encode_state(cfg: EncodingConfig, ctx: SchedContext,
             nb = int(busy.sum())
             out[offset] = 1.0 - nb / caps_t[r]               # free fraction
             if nb:
-                ttf = np.clip(rel[busy] - now, 0.0, None).sum() / nb
+                # Upper clip keeps permanently drained units (release =
+                # +inf phantom reservations) from leaking inf features.
+                ttf = np.clip(rel[busy] - now, 0.0, TTF_HORIZON).sum() / nb
                 out[offset + 1] = ttf / cfg.time_scale       # mean time-to-free
             offset += 2
         return out
@@ -178,6 +180,7 @@ def encode_state(cfg: EncodingConfig, ctx: SchedContext,
         ttf = out[offset + section: offset + section + k]
         np.subtract(rel, ctx.now, out=ttf, where=busy)           # time-to-free
         np.maximum(ttf, 0.0, out=ttf)
+        np.minimum(ttf, TTF_HORIZON, out=ttf)   # drained units release at +inf
         ttf /= cfg.time_scale
         offset += 2 * section
     return out

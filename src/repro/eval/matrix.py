@@ -45,8 +45,11 @@ CORE_COLUMNS = ("policy", "scenario", "family", "drift", "seed",
                 "decisions", "n_unstarted")
 METRIC_COLUMNS = ("avg_wait", "avg_slowdown", "avg_bounded_slowdown",
                   "p95_wait", "max_wait", "n_jobs", "makespan",
-                  "truncated_jobs")  # appended last: committed baselines
-#                                      prefix-compare their column list
+                  "truncated_jobs",
+                  # lifecycle metrics (workflow/fault scenarios) — appended
+                  # last: committed baselines prefix-compare their columns
+                  "requeues", "n_failed", "failed_node_hours",
+                  "completed_work_frac", "pipeline_makespan")
 
 PolicyFactory = Callable[[], object]
 
@@ -157,13 +160,17 @@ def run_matrix(policies: Mapping[str, PolicyFactory],
         for i in range(0, len(cells), width):
             chunk = cells[i:i + width]
             jobsets = [traces[c] for c in chunk]
+            # Scenario fault plans ride alongside the trace: the engine
+            # consumes them directly (they are not job attributes).
+            flist = [get_scenario(s).faults for s, _ in chunk]
             if batched:
                 vec = VectorSimulator.from_jobsets(resources, jobsets,
-                                                   probe, sim_cfg)
+                                                   probe, sim_cfg,
+                                                   faults=flist)
             else:
                 vec = VectorSimulator.from_factory(resources, jobsets,
                                                    eval_factory(factory),
-                                                   sim_cfg)
+                                                   sim_cfg, faults=flist)
             for (scenario, seed), result in zip(chunk, vec.run()):
                 rows.append(_row(name, scenario, seed, result, resources))
         if was_training:

@@ -14,6 +14,12 @@ import numpy as np
 
 from .job import Job
 
+# Time-to-free values are clamped to this horizon (30 days) in the state
+# encoding: a permanently drained unit carries an infinite release time,
+# which would otherwise leak inf into the NN features.  Ordinary jobs
+# (walltime <= 1 day in every trace family) never reach the clamp.
+TTF_HORIZON = 30.0 * 86400.0
+
 
 @dataclass(frozen=True)
 class ResourceSpec:
@@ -36,6 +42,13 @@ class Cluster:
     resource ``r`` (from the running job's user walltime estimate), or 0.0
     when the unit is free — exactly the quantity the paper's state encoding
     consumes.
+
+    Drained units (fault injection) are modeled as *phantom reservations*:
+    the unit's release time is set to the restore time (``inf`` for a
+    permanent failure) without any owning job, so every fit / reservation /
+    backfill / encoding path treats the outage like one more running job.
+    ``drained[r]`` marks which units are phantom so restores never free a
+    real job's units and utilization can exclude the lost capacity.
     """
 
     def __init__(self, resources: List[ResourceSpec]):
@@ -47,6 +60,9 @@ class Cluster:
         }
         self.free: Dict[str, int] = dict(self.capacities)
         self.running: Dict[int, RunningJob] = {}
+        self.drained: Dict[str, np.ndarray] = {
+            r.name: np.zeros(r.capacity, dtype=bool) for r in self.resources
+        }
 
     # ------------------------------------------------------------ queries
     def fits(self, job: Job) -> bool:
@@ -55,16 +71,29 @@ class Cluster:
     def free_vector(self) -> Dict[str, int]:
         return dict(self.free)
 
+    def drained_count(self, name: str) -> int:
+        return int(self.drained[name].sum())
+
+    def busy_units(self, name: str) -> int:
+        """Units running real work: capacity minus free minus drained."""
+        return self.capacities[name] - self.free[name] - self.drained_count(name)
+
     def utilization(self) -> np.ndarray:
-        """Instantaneous busy fraction per resource (paper's measurement)."""
+        """Instantaneous busy fraction per resource (paper's measurement).
+
+        Drained units count as neither busy nor free — lost capacity is
+        reported through the fault metrics, not as utilization.
+        """
         return np.array(
-            [1.0 - self.free[n] / max(self.capacities[n], 1) for n in self.names],
+            [self.busy_units(n) / max(self.capacities[n], 1) for n in self.names],
             dtype=np.float64,
         )
 
     def earliest_fit_time(self, job: Job, now: float) -> float:
         """Earliest time the job fits, assuming running jobs release at their
-        estimated end times.  Used to place the head-of-queue reservation."""
+        estimated end times.  Used to place the head-of-queue reservation.
+        Phantom (drained) reservations participate like any other: a
+        permanently drained unit releases at ``inf``."""
         t = now
         for n in self.names:
             need = job.demands.get(n, 0)
@@ -94,6 +123,8 @@ class Cluster:
             units[n] = idx
         job.start = now
         job.end = now + job.runtime
+        if job.first_start < 0.0:
+            job.first_start = now
         self.running[job.jid] = RunningJob(job=job, units=units, est_end=est_end)
 
     def release_job(self, jid: int) -> Job:
@@ -104,6 +135,35 @@ class Cluster:
                 self.free[n] += int(idx.size)
         return rj.job
 
+    # ------------------------------------------------------------ faults
+    def residents(self, name: str, count: int) -> List[int]:
+        """jids of running jobs owning any unit of ``name`` in [0, count)."""
+        out = []
+        for jid, rj in self.running.items():
+            idx = rj.units.get(name)
+            if idx is not None and idx.size and int(idx.min()) < count:
+                out.append(jid)
+        return sorted(out)
+
+    def apply_drain(self, name: str, count: int, restore_t: float) -> None:
+        """Mark units [0, count) of ``name`` as phantom-reserved until
+        ``restore_t``.  Resident jobs must have been killed already."""
+        rel = self.release[name]
+        assert not rel[:count].any(), "drain applied over occupied units"
+        assert not self.drained[name][:count].any(), "overlapping drains"
+        rel[:count] = restore_t
+        self.drained[name][:count] = True
+        self.free[name] -= count
+
+    def apply_restore(self, name: str, count: int) -> None:
+        """Return the phantom units of a finished drain to the free pool."""
+        mask = self.drained[name].copy()
+        mask[count:] = False
+        n = int(mask.sum())
+        self.release[name][mask] = 0.0
+        self.drained[name][mask] = False
+        self.free[name] += n
+
     # ------------------------------------------------------------ encoding
     def unit_encoding(self, now: float) -> Dict[str, np.ndarray]:
         """Per-unit (availability, time-to-free) pairs, paper §III-A."""
@@ -112,7 +172,7 @@ class Cluster:
             rel = self.release[n]
             avail = (rel == 0.0).astype(np.float64)
             ttf = np.where(rel > 0.0, np.maximum(rel - now, 0.0), 0.0)
-            out[n] = np.stack([avail, ttf], axis=1)
+            out[n] = np.stack([avail, np.minimum(ttf, TTF_HORIZON)], axis=1)
         return out
 
     def running_jobs(self) -> List[RunningJob]:

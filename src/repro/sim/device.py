@@ -1,55 +1,93 @@
 """Device-resident rollout engine: the whole simulation loop in one jit.
 
 ``DeviceSimulator`` runs N independent trace simulations as ONE device
-program: a ``lax.scan`` over scheduling rounds whose body advances job
-arrival/completion events (one coalesced-timestamp pop per round, which
-the ``3J + 2`` round budget covers), packs the
-first-W waiting jobs per environment (``repro.kernels.window_pack``),
-builds the packed decision rows in-graph, scores them with the policy's
-pure ``score_window`` stage (``repro.core.policy_api``), and applies the
-selected action — immediate start with first-free unit allocation, or a
-reservation with EASY-backfill shadow accounting.  The host engines pay
-a Python round trip per scheduling round; here the only host work is
-packing the traces up front and summarizing metrics at the end.
+program: a ``lax.scan`` over scheduling rounds whose body advances
+lifecycle events (one coalesced-timestamp pop per round, which the round
+budget covers), packs the first-W waiting jobs per environment
+(``repro.kernels.window_pack``), builds the packed decision rows
+in-graph, scores them with the policy's pure ``score_window`` stage
+(``repro.core.policy_api``), and applies the selected action — immediate
+start with first-free unit allocation, or a reservation with
+EASY-backfill shadow accounting.  The host engines pay a Python round
+trip per scheduling round; here the only host work is packing the traces
+up front and summarizing metrics at the end.
+
+The job lifecycle (``repro.sim.lifecycle``) is folded into the pump via
+the pure ``device_*`` transitions: per-job READY times replace the old
+arrival pointer (``max(submit, max_parent(end) + think)``, ``+inf``
+while a parent is unfinished), attempt ends are attempt-aware (a
+failure-point attempt is killed and requeued instead of finishing),
+and drain/restore events kill residents and phantom-reserve unit ranges
+(owner ``PHANTOM_OWNER``) exactly like the host's ``JobLifecycle``.
+Traces without dependencies, failure points, or drains stage the same
+lean graph as before — the extra transitions are Python staging-time
+branches on zero-size axes.
 
 State layout (leading axis = environment):
 
 * job arrays ``(N, J)`` — submit/runtime/walltime (f32, padded jobs
   carry ``submit = +inf`` so they never arrive) and demands ``(N, J, R)``
-  (f32 unit counts; exact below 2**24);
-* ``n_arrived`` pointers — traces are sorted by (submit, jid), so the
-  waiting queue in arrival order is exactly "arrived and not started in
-  ascending job index", which is what the window-pack kernel assumes;
+  (f32 unit counts; exact below 2**24); dependency indices ``(N, J, P)``
+  (packed job index, -1 = none), think times ``(N, J)`` and failure
+  points ``(N, J, A)`` (+inf padded);
+* lifecycle state ``(N, J)`` — ``ready``/``started``/``finished``/
+  ``failed`` masks, ``requeues``/``cur_fail`` attempt state,
+  ``first_start_j``/``failed_work`` accounting; the waiting queue in
+  (original submit, jid) order is exactly "ready and in no other live
+  state, in ascending job index", which is what the window-pack kernel
+  assumes (requeued jobs re-enter at their original position for free);
 * per-unit cluster state ``(N, U)`` with ``U = sum(capacities)`` —
   ``release`` (estimated release time, 0 = free, mirroring
-  ``Cluster.release``) and ``owner`` (job index, -1 free), in fixed
+  ``Cluster.release``; drained units carry their restore time) and
+  ``owner`` (job index, -1 free, -2 phantom/drained), in fixed
   per-resource segments;
 * scalars per env — ``now``, ``in_pass``, ``done``, ``decisions``.
 
-Semantics mirror ``Simulator`` event for event (coalesced timestamps,
-scheduling-pass continuation, first-free unit allocation, reservation at
-the earliest fit time, shadow-debit backfill in queue order), so an
-N=1 rollout reproduces the sequential engine round for round; times are
-float32 on device, so derived metrics agree to float32 precision
-(pinned in ``tests/test_device.py``).
+Semantics mirror ``Simulator`` event for event (coalesced timestamps
+applied ends -> queue entries -> drains -> restores, scheduling-pass
+continuation, first-free unit allocation, reservation at the earliest
+fit time, shadow-debit backfill in queue order), so an N=1 rollout
+reproduces the sequential engine round for round; times are float32 on
+device, so derived metrics agree to float32 precision (pinned in
+``tests/test_device.py``).
 """
 from __future__ import annotations
 
 import functools
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..kernels.window_pack.ops import pack_window
-from .cluster import Cluster, ResourceSpec
+from .cluster import TTF_HORIZON, Cluster, ResourceSpec
 from .job import Job
+from .lifecycle import (FAILED, FINISHED, FaultSchedule, device_apply_drains,
+                        device_apply_ends, device_apply_restores,
+                        device_attempt, device_next_event, device_queued,
+                        device_ready, resolve_faults)
 from .metrics import MetricsAccumulator
 from .simulator import SimConfig, SimResult
 
 INF = jnp.float32(jnp.inf)
+
+
+class DeviceFaults(NamedTuple):
+    """Packed fault schedules, one row per environment (D = max drains).
+
+    Unused drain slots carry ``drain_t = +inf`` so they never fire;
+    ``unit_seg``/``unit_local`` map every packed unit to its (resource
+    segment, within-segment index) so a drain's "first k units of
+    resource r" range is one vectorized compare."""
+    drain_t: jnp.ndarray        # (N, D) f32, +inf = unused slot
+    restore_t: jnp.ndarray      # (N, D) f32, +inf = permanent drain
+    drain_res: jnp.ndarray      # (N, D) i32 resource segment index
+    drain_units: jnp.ndarray    # (N, D) i32 leading units drained
+    unit_seg: jnp.ndarray       # (U,)  i32 segment of each packed unit
+    unit_local: jnp.ndarray     # (U,)  i32 index within the segment
+    max_requeues: jnp.ndarray   # (N, 1) i32 requeue bound per env
 
 
 @dataclass(frozen=True)
@@ -71,6 +109,11 @@ class DeviceLayout:
     @property
     def n_resources(self) -> int:
         return len(self.names)
+
+    @property
+    def node_idx(self) -> int:
+        """Resource anchoring the failed-work metric (JobLifecycle.primary)."""
+        return self.names.index("node") if "node" in self.names else 0
 
     @property
     def segments(self) -> Tuple[Tuple[int, int], ...]:
@@ -149,44 +192,45 @@ def _segment_free(layout: DeviceLayout, release: jnp.ndarray) -> jnp.ndarray:
     return jnp.stack(cols, axis=1).astype(jnp.float32)
 
 
-def _advance_events(layout: DeviceLayout, arrays, st):
+def _advance_events(layout: DeviceLayout, arrays, faults: DeviceFaults, st):
     """Batched event step: pop+apply ONE coalesced timestamp per env not
     inside a scheduling pass.  Runs inline in the round body (no
     ``while_loop`` — its computation boundaries dominate the per-round
     cost on small problems); an env that pops a decision-free timestamp
-    simply pops again next round, which the 3J+2 round budget covers
-    (each job contributes at most one arrival pop, one completion pop,
-    and one decision per pass it opens)."""
-    jidx = jnp.arange(layout.n_jobs)
-    s = st
-    arrived = jidx[None, :] < s["n_arrived"][:, None]
+    simply pops again next round, which the round budget covers.
+
+    Events at one timestamp apply in the host engines' kind order:
+    attempt ends (clean finish or failure-point kill), then queue
+    entries (implicit — the queued mask is derived from READY times),
+    then drains, then restores."""
+    P = arrays["deps_idx"].shape[2]
+    A = arrays["fail_times"].shape[2]
+    D = faults.drain_t.shape[1]
+    s = dict(st)
     # A pass over an empty queue ends silently (Simulator.next_decision).
-    in_pass = s["in_pass"] & (arrived & ~s["started"]).any(axis=1)
+    queued_any = device_queued(s["ready"], s["now"], s["started"],
+                               s["finished"], s["failed"]).any(axis=1)
+    in_pass = s["in_pass"] & queued_any
     adv = ~in_pass & ~s["done"]
-    next_submit = jnp.take_along_axis(
-        arrays["submit_ext"], s["n_arrived"][:, None], axis=1)[:, 0]
-    running = s["started"] & ~s["finished"]
-    next_end = jnp.min(jnp.where(running, s["end"], INF), axis=1)
-    t = jnp.minimum(next_submit, next_end)
+    t = device_next_event(s["now"], s["ready"], s["end"], s["started"],
+                          s["finished"], s["failed"],
+                          faults if D else None, s)
     no_ev = ~jnp.isfinite(t)
-    done = s["done"] | (adv & no_ev)
+    s["done"] = s["done"] | (adv & no_ev)
     act = adv & ~no_ev
-    now = jnp.where(act, t, s["now"])
-    # Apply ALL events at the popped timestamp (coalescing): arrivals…
-    is_sub = ((jidx[None, :] >= s["n_arrived"][:, None])
-              & (arrays["submit"] == t[:, None]) & act[:, None])
-    n_arrived = s["n_arrived"] + is_sub.sum(axis=1)
-    # …and completions, whose units free up immediately.
-    ends = running & (s["end"] == t[:, None]) & act[:, None]
-    finished = s["finished"] | ends
-    owner = s["owner"]
-    owner_ended = (jnp.take_along_axis(
-        ends, jnp.maximum(owner, 0), axis=1) & (owner >= 0))
-    release = jnp.where(owner_ended, 0.0, s["release"])
-    owner = jnp.where(owner_ended, -1, owner)
-    return {**s, "in_pass": in_pass | act, "done": done, "now": now,
-            "n_arrived": n_arrived, "finished": finished,
-            "release": release, "owner": owner}
+    s["now"] = jnp.where(act, t, s["now"])
+    s = device_apply_ends(t, act, arrays["demands"], layout.node_idx,
+                          faults.max_requeues, s, has_kills=(A > 0 or D > 0))
+    if D:
+        s = device_apply_drains(t, act, faults, arrays["demands"],
+                                layout.node_idx, s)
+        s = device_apply_restores(t, act, faults, s)
+    if P:
+        # Finishes may have released dependents: recompute READY times.
+        s["ready"] = device_ready(arrays["submit"], arrays["deps_idx"],
+                                  arrays["think"], s["end"], s["finished"])
+    s["in_pass"] = in_pass | act
+    return s
 
 
 def _alloc_first_free(layout: DeviceLayout, release, owner, env_mask,
@@ -209,7 +253,9 @@ def _alloc_first_free(layout: DeviceLayout, release, owner, env_mask,
 def _earliest_fit(layout: DeviceLayout, release, free, demand, now):
     """Per-env earliest time ``demand`` fits assuming estimated releases
     (mirrors ``Cluster.earliest_fit_time``): the need-th smallest release
-    per resource (free units sort first as 0.0), max over resources."""
+    per resource (free units sort first as 0.0), max over resources.
+    Permanently drained units carry ``release = +inf`` and therefore
+    never count toward a future fit, exactly like the host."""
     t_res = now
     for r, (off, cap) in enumerate(layout.segments):
         seg_sorted = jnp.sort(release[:, off:off + cap], axis=1)
@@ -223,11 +269,14 @@ def _earliest_fit(layout: DeviceLayout, release, free, demand, now):
 
 
 def _easy_backfill(layout: DeviceLayout, arrays, st, free, need, waiting,
-                   j_star, d_star):
+                   j_star, d_star, dur_all, will_fail_all):
     """EASY backfill for envs whose selection did not fit (vectorized
     mirror of ``Simulator._easy_backfill``): reservation at the earliest
     fit time, shadow accounting in queue order, then one batched
-    first-fit unit assignment for every job that may jump ahead."""
+    first-fit unit assignment for every job that may jump ahead.
+    ``dur_all``/``will_fail_all`` describe each job's NEXT attempt
+    (``lifecycle.device_attempt``) so a backfilled doomed attempt ends at
+    its failure point, exactly like an immediate start."""
     N, J, R = layout.n_envs, layout.n_jobs, layout.n_resources
     now = st["now"]
     t_res = _earliest_fit(layout, st["release"], free, d_star, now)
@@ -284,7 +333,6 @@ def _easy_backfill(layout: DeviceLayout, arrays, st, free, need, waiting,
         free_ok = None
         shadow_fit = None
         d_acc_cols = []
-        s_acc_cols = []
         for r in range(R):
             d_r = arrays["demands"][:, :, r]
             cum_r = jnp.cumsum(ok_f * d_r, axis=1)
@@ -343,26 +391,43 @@ def _easy_backfill(layout: DeviceLayout, arrays, st, free, need, waiting,
 
         started = st["started"] | bf_start
         start = jnp.where(bf_start, now[:, None], st["start"])
-        end = jnp.where(bf_start, now[:, None] + arrays["runtime"],
-                        st["end"])
+        end = jnp.where(bf_start, now[:, None] + dur_all, st["end"])
         est_end = jnp.where(bf_start, est_all, st["est_end"])
+        fsj = jnp.where(bf_start & (st["first_start_j"] < 0),
+                        now[:, None], st["first_start_j"])
         any_bf = bf_start.any(axis=1)
         first = jnp.where(any_bf, jnp.minimum(st["first_start"], now),
                           st["first_start"])
-        return {**st, "release": release, "owner": owner,
-                "started": started, "start": start, "end": end,
-                "est_end": est_end, "first_start": first}
+        out = {**st, "release": release, "owner": owner,
+               "started": started, "start": start, "end": end,
+               "est_end": est_end, "first_start": first,
+               "first_start_j": fsj}
+        if will_fail_all is not None:
+            out["cur_fail"] = jnp.where(bf_start, will_fail_all,
+                                        st["cur_fail"])
+        return out
 
     return jax.lax.cond(bf_start.any(), assign_units, lambda st: st, st)
 
 
-def _meas_goal(layout: DeviceLayout, arrays, st, free, waiting):
+def _meas_goal(layout: DeviceLayout, arrays, st, free, waiting,
+               has_drains: bool):
     """Measurement (utilization) + Eq. (1) goal, (N, R) each — the shared
-    tail of every packed decision row, module-independent."""
+    tail of every packed decision row, module-independent.  Drained
+    (phantom-owned) units are neither busy nor free, matching
+    ``Cluster.utilization``."""
+    from .lifecycle import PHANTOM_OWNER
     R = layout.n_resources
     now = st["now"]
     caps_f = jnp.asarray([max(c, 1) for c in layout.caps], jnp.float32)
-    meas = 1.0 - free / caps_f[None, :]
+    if has_drains:
+        ph_cols = [jnp.sum(st["owner"][:, off:off + cap] == PHANTOM_OWNER,
+                           axis=1)
+                   for off, cap in layout.segments]
+        phantom = jnp.stack(ph_cols, axis=1).astype(jnp.float32)
+        meas = 1.0 - (free + phantom) / caps_f[None, :]
+    else:
+        meas = 1.0 - free / caps_f[None, :]
     # Eq. (1) goal over the full waiting queue + running remainders.
     running = st["started"] & ~st["finished"]
     tw = (arrays["walltime"] * waiting
@@ -389,8 +454,8 @@ def _job_tokens(layout: DeviceLayout, st, win_feats, win_valid):
                            axis=-1)
 
 
-def _build_obs(layout: DeviceLayout, arrays, st, free, waiting, win_feats,
-               win_valid):
+def _build_obs(layout: DeviceLayout, arrays, st, win_feats, win_valid,
+               meas, goal):
     """Packed decision rows [state | meas | goal | valid] in-graph,
     mirroring ``encoding.encode_decision_row`` (float32 throughout)."""
     N, R, W = layout.n_envs, layout.n_resources, layout.window
@@ -402,12 +467,15 @@ def _build_obs(layout: DeviceLayout, arrays, st, free, waiting, win_feats,
     # Unit sections use the encoding's reference section sizes; a cluster
     # with fewer units fills the leading slots (encode_state semantics).
     # avail/ttf are computed once over the whole unit axis; the per-
-    # segment views below are free slices.
+    # segment views below are free slices.  The TTF_HORIZON clip keeps
+    # permanently drained units (release = +inf) out of the features,
+    # matching encode_state.
     busy_all = st["release"] > 0.0
     avail_all = jnp.where(busy_all, 0.0, 1.0)
-    ttf_all = jnp.where(busy_all,
-                        jnp.maximum(st["release"] - now[:, None], 0.0),
-                        0.0) / ts
+    ttf_all = jnp.where(
+        busy_all,
+        jnp.clip(st["release"] - now[:, None], 0.0, TTF_HORIZON),
+        0.0) / ts
     for r, (off, cap) in enumerate(layout.segments):
         k = min(cap, int(layout.enc_caps[r]))
         avail = avail_all[:, off:off + k]
@@ -418,12 +486,11 @@ def _build_obs(layout: DeviceLayout, arrays, st, free, waiting, win_feats,
             avail = jnp.concatenate([avail, zeros], axis=1)
             ttf = jnp.concatenate([ttf, zeros], axis=1)
         parts.extend([avail, ttf])
-    meas, goal = _meas_goal(layout, arrays, st, free, waiting)
     return jnp.concatenate(parts + [meas, goal, valid_f], axis=1)
 
 
-def _build_obs_attention(layout: DeviceLayout, arrays, st, free, waiting,
-                         q_feats, q_valid):
+def _build_obs_attention(layout: DeviceLayout, arrays, st, waiting,
+                         q_feats, q_valid, meas, goal):
     """Attention-layout decision rows, mirroring ``encoding.encode_state``
     with ``state_module="attention"``:
     ``[Q*(R+2) tokens | queue_len | 2R context | meas | goal | valid(W)]``.
@@ -441,12 +508,11 @@ def _build_obs_attention(layout: DeviceLayout, arrays, st, free, waiting,
         busy = seg > 0.0
         nb = busy.sum(axis=1).astype(jnp.float32)
         ctx_cols.append(1.0 - nb / float(max(cap, 1)))       # free fraction
-        ttf_sum = jnp.where(busy,
-                            jnp.maximum(seg - now[:, None], 0.0),
-                            0.0).sum(axis=1)
+        ttf_sum = jnp.where(
+            busy, jnp.clip(seg - now[:, None], 0.0, TTF_HORIZON),
+            0.0).sum(axis=1)
         ctx_cols.append(jnp.where(nb > 0, ttf_sum / jnp.maximum(nb, 1.0), 0.0)
                         / ts)                                # mean time-to-free
-    meas, goal = _meas_goal(layout, arrays, st, free, waiting)
     return jnp.concatenate(
         [tok.reshape(N, Q * (R + 2)), qlen[:, None],
          jnp.stack(ctx_cols, axis=1), meas, goal,
@@ -454,22 +520,46 @@ def _build_obs_attention(layout: DeviceLayout, arrays, st, free, waiting,
 
 
 def _device_rollout(layout: DeviceLayout, score_fn, explore: bool,
-                    collect: bool, arrays, policy_state, eps, key):
+                    collect: bool, arrays, faults: DeviceFaults,
+                    policy_state, eps, key):
     """The whole N-env x T-round rollout as one traced program."""
     N, J, R, W = (layout.n_envs, layout.n_jobs, layout.n_resources,
                   layout.window)
+    P = arrays["deps_idx"].shape[2]
+    A = arrays["fail_times"].shape[2]
+    D = faults.drain_t.shape[1]
+    has_drains = D > 0
     jidx = jnp.arange(J)
+    end0 = jnp.full((N, J), jnp.inf, jnp.float32)
+    finished0 = jnp.zeros((N, J), bool)
+    falses0 = jnp.zeros((N, J), bool)
+    now0 = jnp.zeros(N, jnp.float32)
+    ready0 = device_ready(arrays["submit"], arrays["deps_idx"],
+                          arrays["think"], end0, finished0)
+    # Jobs ready at t=0 are queued before any event can fire (the pending-
+    # ready event below is strictly future), so their scheduling pass is
+    # seeded here — the host's t=0 submit pop.
+    in_pass0 = device_queued(ready0, now0, falses0, finished0,
+                             falses0).any(axis=1)
     st = {
-        "now": jnp.zeros(N, jnp.float32),
-        "n_arrived": jnp.zeros(N, jnp.int32),
+        "now": now0,
+        "ready": ready0,
         "started": jnp.zeros((N, J), bool),
-        "finished": jnp.zeros((N, J), bool),
+        "finished": finished0,
+        "failed": jnp.zeros((N, J), bool),
         "start": jnp.full((N, J), -1.0, jnp.float32),
-        "end": jnp.full((N, J), jnp.inf, jnp.float32),
+        "end": end0,
         "est_end": jnp.zeros((N, J), jnp.float32),
+        "first_start_j": jnp.full((N, J), -1.0, jnp.float32),
+        "requeues": jnp.zeros((N, J), jnp.int32),
+        "cur_fail": jnp.zeros((N, J), bool),
+        "failed_work": jnp.zeros((N, J), jnp.float32),
+        "failed_area": jnp.zeros((N, R), jnp.float32),
         "release": jnp.zeros((N, layout.n_units), jnp.float32),
         "owner": jnp.full((N, layout.n_units), -1, jnp.int32),
-        "in_pass": jnp.zeros(N, bool),
+        "drain_done": jnp.zeros((N, D), bool),
+        "restore_done": jnp.zeros((N, D), bool),
+        "in_pass": in_pass0,
         "done": jnp.zeros(N, bool),
         "decisions": jnp.zeros(N, jnp.int32),
         "truncated": jnp.zeros(N, jnp.int32),
@@ -485,8 +575,8 @@ def _device_rollout(layout: DeviceLayout, score_fn, explore: bool,
 
     def decide(s):
         now = s["now"]
-        arrived = jidx[None, :] < s["n_arrived"][:, None]
-        waiting = (arrived & ~s["started"]).astype(jnp.float32)
+        waiting = device_queued(s["ready"], now, s["started"], s["finished"],
+                                s["failed"]).astype(jnp.float32)
         n_waiting = waiting.sum(axis=1)
         need = s["in_pass"] & (n_waiting > 0) & ~s["done"]
         free = _segment_free(layout, s["release"])
@@ -499,12 +589,15 @@ def _device_rollout(layout: DeviceLayout, score_fn, explore: bool,
         win_idx, win_valid = pk_idx[:, :W], pk_valid[:, :W]
         if not layout.requires_obs:
             obs = win_valid.astype(jnp.float32)
-        elif attention:
-            obs = _build_obs_attention(layout, arrays, s, free, waiting,
-                                       pk_feats, pk_valid)
         else:
-            obs = _build_obs(layout, arrays, s, free, waiting, pk_feats,
-                             pk_valid)
+            meas, goal = _meas_goal(layout, arrays, s, free, waiting,
+                                    has_drains)
+            if attention:
+                obs = _build_obs_attention(layout, arrays, s, waiting,
+                                           pk_feats, pk_valid, meas, goal)
+            else:
+                obs = _build_obs(layout, arrays, s, pk_feats, pk_valid,
+                                 meas, goal)
         # Jobs a host Simulator would drop from the observable window this
         # decision (ScheduleMetrics.truncated_jobs; the attention module
         # still reports window truncation so the A/B comparison reads the
@@ -528,10 +621,18 @@ def _device_rollout(layout: DeviceLayout, score_fn, explore: bool,
         fits = jnp.all(d_star <= free, axis=1)
         start_env = need & fits
         reserve_env = need & ~fits
-        # --- immediate start (scheduling pass continues)
+        # --- immediate start (scheduling pass continues).  The attempt's
+        # actual duration is its failure point when the attempt is doomed
+        # (lifecycle.device_attempt); the unit-release ESTIMATE still uses
+        # the walltime, exactly like the host.
+        if A:
+            dur_all, will_fail_all = device_attempt(
+                arrays["fail_times"], s["requeues"], arrays["runtime"])
+        else:
+            dur_all, will_fail_all = arrays["runtime"], None
         wall_star = jnp.take_along_axis(arrays["walltime"], j_star[:, None],
                                         axis=1)[:, 0]
-        run_star = jnp.take_along_axis(arrays["runtime"], j_star[:, None],
+        run_star = jnp.take_along_axis(dur_all, j_star[:, None],
                                        axis=1)[:, 0]
         est = now + wall_star
         release, owner = _alloc_first_free(
@@ -542,30 +643,38 @@ def _device_rollout(layout: DeviceLayout, score_fn, explore: bool,
              "start": jnp.where(sel, now[:, None], s["start"]),
              "end": jnp.where(sel, (now + run_star)[:, None], s["end"]),
              "est_end": jnp.where(sel, est[:, None], s["est_end"]),
+             "first_start_j": jnp.where(sel & (s["first_start_j"] < 0),
+                                        now[:, None], s["first_start_j"]),
              "decisions": s["decisions"] + need,
              "first_start": jnp.where(start_env,
                                       jnp.minimum(s["first_start"], now),
                                       s["first_start"])}
+        if A:
+            wf_star = jnp.take_along_axis(will_fail_all, j_star[:, None],
+                                          axis=1)[:, 0]
+            s = {**s, "cur_fail": jnp.where(sel, wf_star[:, None],
+                                            s["cur_fail"])}
         # --- reservation + EASY backfill (scheduling pass ends).  The
         # call is cheap when no env reserved (no fitting candidates ->
         # zero queue-walk iterations, unit assignment conditioned out),
         # so it runs unconditionally rather than behind another cond.
         if layout.backfill:
             s = _easy_backfill(layout, arrays, s, free, reserve_env,
-                               waiting, j_star, d_star)
+                               waiting, j_star, d_star, dur_all,
+                               will_fail_all)
         s = {**s, "in_pass": s["in_pass"] & ~reserve_env}
         a_out = jnp.where(need, a, -1)
         obs_out = obs if collect else jnp.zeros((N, 0), jnp.float32)
         return s, a_out, need, obs_out
 
     def round_body(s, _):
-        s = _advance_events(layout, arrays, s)
+        s = _advance_events(layout, arrays, faults, s)
         # Single-pop advancement can leave an env in_pass with an empty
         # queue (completion-only timestamp) — only envs with waiting
         # jobs actually need a decision this round.
-        arrived = jidx[None, :] < s["n_arrived"][:, None]
-        any_need = jnp.any(s["in_pass"] & ~s["done"]
-                           & (arrived & ~s["started"]).any(axis=1))
+        qa = device_queued(s["ready"], s["now"], s["started"], s["finished"],
+                           s["failed"]).any(axis=1)
+        any_need = jnp.any(s["in_pass"] & ~s["done"] & qa)
 
         def live(s):
             return decide(s)
@@ -580,6 +689,10 @@ def _device_rollout(layout: DeviceLayout, score_fn, explore: bool,
     st, (actions, decided, obs_log) = jax.lax.scan(
         round_body, st, None, length=layout.rounds)
     out = {"started": st["started"], "start": st["start"], "end": st["end"],
+           "finished": st["finished"], "failed": st["failed"],
+           "requeues": st["requeues"], "failed_work": st["failed_work"],
+           "failed_area": st["failed_area"],
+           "first_start_j": st["first_start_j"],
            "now": st["now"], "decisions": st["decisions"],
            "truncated": st["truncated"],
            "first_start": st["first_start"], "done": st["done"],
@@ -601,11 +714,15 @@ class DeviceSimulator:
     result contract, ``rollout()`` additionally returns the decision
     trace (and, with ``collect=True``, the packed decision rows for
     training ingestion).
+
+    ``faults`` mirrors the host engines: ``None``, one ``FaultSchedule``
+    shared by every environment, or one (possibly ``None``) schedule per
+    jobset.
     """
 
     def __init__(self, resources: Sequence[ResourceSpec],
                  jobsets: Sequence[Sequence[Job]], policy,
-                 config: SimConfig | None = None):
+                 config: SimConfig | None = None, *, faults=None):
         from ..core.policy_api import supports_device
         if not supports_device(policy):
             raise TypeError(
@@ -648,7 +765,17 @@ class DeviceSimulator:
                         for js in jobsets]
         N = len(self.jobsets)
         J = max(len(js) for js in self.jobsets)
-        rounds = 3 * J + 2
+        caps_map = dict(zip(names, caps))
+        if faults is None or isinstance(faults, FaultSchedule):
+            flist = [faults] * N
+        else:
+            flist = list(faults)
+            if len(flist) != N:
+                raise ValueError(
+                    f"got {len(flist)} fault schedules for {N} jobsets")
+        self._faults = [resolve_faults(f, js, caps_map)
+                        for f, js in zip(flist, self.jobsets)]
+        rounds = 3 * J + 2 + self._fault_rounds()
         if self.config.max_rounds is not None:
             rounds = min(rounds, int(self.config.max_rounds))
         self.layout = DeviceLayout(
@@ -658,8 +785,29 @@ class DeviceSimulator:
             requires_obs=requires_obs, time_scale=time_scale,
             state_module=state_module, queue_cap=queue_cap)
         self.arrays = self._pack(self.jobsets)
+        self.faults_arrays = self._pack_faults(self._faults)
         self.stats = DeviceStats()
         self._jitted: Dict[Tuple[bool, bool], object] = {}
+
+    def _fault_rounds(self) -> int:
+        """Extra scan rounds for fault activity, max over environments:
+        every kill adds one end pop and one restart decision; every drain
+        adds its own pop, a restore pop, and a restart cycle per resident
+        it can kill (bounded by the unit count)."""
+        extra = 0
+        for js, f in zip(self.jobsets, self._faults):
+            kills = 0
+            for job in js:
+                k = 0
+                for ft in job.fail_times:
+                    if ft < job.runtime and k < f.max_requeues + 1:
+                        k += 1
+                    else:
+                        break
+                kills += k
+            dcost = sum(2 + 2 * min(len(js), d.units) for d in f.drains)
+            extra = max(extra, 2 * kills + dcost)
+        return extra
 
     # ------------------------------------------------------------- packing
     def _pack(self, jobsets) -> Dict[str, jnp.ndarray]:
@@ -671,6 +819,21 @@ class DeviceSimulator:
         demands = np.zeros((N, J, R), np.float32)
         static = np.zeros((N, J, R + 1), np.float32)
         caps_f = [float(max(c, 1)) for c in lay.caps]
+        # Dependency edges resolve to packed job indices per environment;
+        # dangling or self deps are dropped (JobLifecycle semantics).
+        dep_lists = []
+        for js in jobsets:
+            id2idx = {job.jid: j for j, job in enumerate(js)}
+            dep_lists.append([
+                [id2idx[d] for d in job.deps
+                 if d in id2idx and d != job.jid]
+                for job in js])
+        P = max((len(ds) for env in dep_lists for ds in env), default=0)
+        A = max((len(job.fail_times) for js in jobsets for job in js),
+                default=0)
+        deps_idx = np.full((N, J, P), -1, np.int32)
+        think = np.zeros((N, J), np.float32)
+        fail_times = np.full((N, J, A), np.inf, np.float32)
         for i, js in enumerate(jobsets):
             for j, job in enumerate(js):
                 submit[i, j] = job.submit
@@ -681,18 +844,55 @@ class DeviceSimulator:
                     demands[i, j, r] = d
                     static[i, j, r] = d / caps_f[r]       # f64 div, f32 store
                 static[i, j, R] = job.walltime / lay.time_scale
-        submit_ext = np.concatenate(
-            [submit, np.full((N, 1), np.inf)], axis=1)
+                ds = dep_lists[i][j]
+                deps_idx[i, j, :len(ds)] = ds
+                think[i, j] = job.think_time
+                fail_times[i, j, :len(job.fail_times)] = job.fail_times
         return {
             "submit": jnp.asarray(submit, jnp.float32),
-            "submit_ext": jnp.asarray(submit_ext, jnp.float32),
             "submit_feat": jnp.asarray(
                 np.where(np.isfinite(submit), submit, 0.0), jnp.float32),
             "runtime": jnp.asarray(runtime, jnp.float32),
             "walltime": jnp.asarray(walltime, jnp.float32),
             "demands": jnp.asarray(demands),
             "static_feats": jnp.asarray(static),
+            "deps_idx": jnp.asarray(deps_idx),
+            "think": jnp.asarray(think),
+            "fail_times": jnp.asarray(fail_times),
         }
+
+    def _pack_faults(self, resolved: List[FaultSchedule]) -> DeviceFaults:
+        lay = self.layout
+        N = lay.n_envs
+        D = max((len(f.drains) for f in resolved), default=0)
+        drain_t = np.full((N, D), np.inf, np.float32)
+        restore_t = np.full((N, D), np.inf, np.float32)
+        drain_res = np.zeros((N, D), np.int32)
+        drain_units = np.zeros((N, D), np.int32)
+        mr = np.zeros((N, 1), np.int32)
+        res_idx = {n: r for r, n in enumerate(lay.names)}
+        for i, f in enumerate(resolved):
+            mr[i, 0] = f.max_requeues
+            for k, d in enumerate(f.drains):
+                drain_t[i, k] = d.time
+                restore_t[i, k] = d.time + d.duration
+                drain_res[i, k] = res_idx[d.resource]
+                drain_units[i, k] = d.units
+        seg_cols = [np.full(cap, r, np.int32)
+                    for r, (_, cap) in enumerate(lay.segments)]
+        loc_cols = [np.arange(cap, dtype=np.int32)
+                    for _, cap in lay.segments]
+        unit_seg = (np.concatenate(seg_cols) if seg_cols
+                    else np.zeros(0, np.int32))
+        unit_local = (np.concatenate(loc_cols) if loc_cols
+                      else np.zeros(0, np.int32))
+        return DeviceFaults(
+            drain_t=jnp.asarray(drain_t), restore_t=jnp.asarray(restore_t),
+            drain_res=jnp.asarray(drain_res),
+            drain_units=jnp.asarray(drain_units),
+            unit_seg=jnp.asarray(unit_seg),
+            unit_local=jnp.asarray(unit_local),
+            max_requeues=jnp.asarray(mr))
 
     # ------------------------------------------------------------- rollout
     def _fn(self, explore: bool, collect: bool):
@@ -715,7 +915,7 @@ class DeviceSimulator:
         """
         explore = eps is not None
         out = self._fn(explore, collect)(
-            self.arrays, self.policy.init_state(),
+            self.arrays, self.faults_arrays, self.policy.init_state(),
             jnp.float32(0.0 if eps is None else eps),
             jax.random.PRNGKey(seed))
         out = {k: np.asarray(v) for k, v in out.items()}
@@ -742,13 +942,22 @@ class DeviceSimulator:
     def _results(self, out) -> List[SimResult]:
         results = []
         for i, js in enumerate(self.jobsets):
-            started_m = out["started"][i]
             jobs = []
             for j, job in enumerate(js):
                 job = job.copy()
-                if started_m[j]:
+                job.requeues = int(out["requeues"][i, j])
+                job.failed_work = float(out["failed_work"][i, j])
+                fs = float(out["first_start_j"][i, j])
+                if fs >= 0.0:
+                    job.first_start = fs
+                if out["finished"][i, j]:
+                    job.state = FINISHED
+                elif out["failed"][i, j]:
+                    job.state = FAILED
+                if out["started"][i, j]:
                     job.start = float(out["start"][i, j])
-                    job.end = float(out["end"][i, j])
+                    e = float(out["end"][i, j])
+                    job.end = e if np.isfinite(e) else -1.0
                 jobs.append(job)
             started = [jb for jb in jobs if jb.started]
             cluster = Cluster(self.resources)
@@ -756,11 +965,16 @@ class DeviceSimulator:
             acc.last_time = float(out["now"][i])
             acc.start_time = (float(out["first_start"][i]) if started
                               else None)
+            # Busy area = completed attempts' occupancy + the work lost to
+            # killed attempts (the host integral counted the latter while
+            # the doomed attempts were running).  Drained units are
+            # phantom-owned, so they contribute to neither term.
             for r, n in enumerate(self.layout.names):
-                acc.busy_area[n] = float(sum(
+                done_area = sum(
                     jb.demands.get(n, 0) * (jb.end - jb.start)
-                    for jb in started))
-            metrics = acc.summarize(started)
+                    for jb in jobs if jb.state == FINISHED)
+                acc.busy_area[n] = done_area + float(out["failed_area"][i, r])
+            metrics = acc.summarize(started, all_jobs=jobs)
             metrics.truncated_jobs = int(out["truncated"][i])
             results.append(SimResult(
                 metrics=metrics,
@@ -768,13 +982,17 @@ class DeviceSimulator:
                 makespan=float(out["now"][i]),
                 decisions=int(out["decisions"][i]),
                 n_unstarted=len(jobs) - len(started),
-                truncated_jobs=int(out["truncated"][i])))
+                truncated_jobs=int(out["truncated"][i]),
+                requeues=metrics.requeues,
+                n_failed=metrics.n_failed))
         return results
 
 
 def run_traces_device(resources: Sequence[ResourceSpec],
                       jobsets: Sequence[Sequence[Job]], policy,
-                      config: SimConfig | None = None) -> List[SimResult]:
+                      config: SimConfig | None = None,
+                      faults=None) -> List[SimResult]:
     """Convenience device counterpart of ``run_trace``/``run_traces``."""
     cfg = config or SimConfig.for_engine("device")
-    return DeviceSimulator(resources, jobsets, policy, cfg).run()
+    return DeviceSimulator(resources, jobsets, policy, cfg,
+                           faults=faults).run()

@@ -2,7 +2,7 @@
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict
+from typing import Dict, Tuple
 
 import numpy as np
 
@@ -14,6 +14,18 @@ class Job:
     ``demands`` maps resource name -> requested units (integer), e.g.
     ``{"node": 512, "bb": 40, "power": 60}``.  Burst buffer is in units
     (default 1 TB/unit); power in kW of *incremental* draw above idle.
+
+    Workflow/fault extensions (see ``repro.sim.lifecycle``):
+
+    - ``deps``: jids of parent jobs; this job is HELD until every parent
+      FINISHes (dangling jids — parents not present in the jobset — are
+      treated as already satisfied, so sampled sub-traces stay runnable).
+    - ``think_time``: seconds after the last parent finishes before this
+      job becomes eligible (SWF field 18).
+    - ``fail_times``: per-attempt failure points, in seconds after the
+      attempt starts.  Attempt ``k`` dies at ``fail_times[k]`` if that is
+      strictly less than ``runtime``; attempts beyond ``len(fail_times)``
+      (and entries >= runtime) run to completion.
     """
 
     jid: int
@@ -22,17 +34,35 @@ class Job:
     walltime: float                     # user estimate (seconds), >= runtime
     demands: Dict[str, int] = field(default_factory=dict)
 
-    # Mutable scheduling state
+    # Mutable scheduling state (current attempt)
     start: float = -1.0
     end: float = -1.0
 
+    # Workflow / fault spec (fixed per trace, survives ``copy()``)
+    deps: Tuple[int, ...] = ()
+    think_time: float = 0.0
+    fail_times: Tuple[float, ...] = ()
+
+    # Lifecycle state (reset by ``copy()``); ``state`` holds a
+    # ``repro.sim.lifecycle`` state constant (HELD == 0).
+    state: int = 0
+    first_start: float = -1.0           # start of the FIRST attempt
+    requeues: int = 0                   # completed failed attempts
+    failed_work: float = 0.0            # node-seconds lost to killed attempts
+
     @property
     def started(self) -> bool:
-        return self.start >= 0.0
+        return self.first_start >= 0.0 or self.start >= 0.0
 
     @property
     def wait(self) -> float:
-        return self.start - self.submit
+        """Queue wait measured from submission to the FIRST attempt.
+
+        Requeued jobs keep the wait of their first start — a job that ran,
+        failed, and ran again did not wait longer for service.
+        """
+        s = self.first_start if self.first_start >= 0.0 else self.start
+        return s - self.submit
 
     @property
     def slowdown(self) -> float:
@@ -65,4 +95,5 @@ class Job:
 
     def copy(self) -> "Job":
         return Job(self.jid, self.submit, self.runtime, self.walltime,
-                   dict(self.demands))
+                   dict(self.demands), deps=self.deps,
+                   think_time=self.think_time, fail_times=self.fail_times)

@@ -1,12 +1,23 @@
 """Event-driven multi-resource scheduling simulator (CQSim-equivalent).
 
 Semantics follow the paper (§IV): jobs are imported from a trace; the
-simulation clock advances on job arrival / job completion events; each
-event triggers a scheduling pass in which the policy (MRSch agent or a
-baseline) repeatedly selects jobs from a window at the head of the queue.
-A selected job that fits starts immediately; the first selected job that
-does not fit receives a reservation at its earliest fit time and EASY
-backfilling then fills the remaining gap (§III-C).
+simulation clock advances on job arrival / eligibility-release / attempt
+end / drain / restore events; each event triggers a scheduling pass in
+which the policy (MRSch agent or a baseline) repeatedly selects jobs from
+a window at the head of the queue.  A selected job that fits starts
+immediately; the first selected job that does not fit receives a
+reservation at its earliest fit time and EASY backfilling then fills the
+remaining gap (§III-C).
+
+All job state transitions flow through ``repro.sim.lifecycle`` — this
+module owns only the event heap, the waiting queue, and the scheduling
+pass.  Events coalesced at one timestamp apply in a fixed kind order
+(attempt ends, then submissions/releases, then drains, then restores) so
+the host engines and the device engine's ``lax.scan`` pump see identical
+intermediate states.  End events carry their attempt id: an attempt
+killed by a drain leaves a stale end event behind, which is dropped
+WITHOUT advancing the clock or opening a pass (the device pump never saw
+it either).
 
 The decision step is *re-entrant*: ``next_decision()`` advances the event
 loop until a policy decision is required and returns the pending
@@ -20,12 +31,13 @@ from __future__ import annotations
 import heapq
 import itertools
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Protocol, Sequence
+from typing import Callable, Dict, List, Optional, Protocol, Sequence, Tuple
 
 import numpy as np
 
 from .cluster import Cluster, ResourceSpec
 from .job import Job
+from .lifecycle import (ELIGIBLE, FaultSchedule, JobLifecycle, insert_queued)
 from .metrics import MetricsAccumulator, ScheduleMetrics
 
 
@@ -34,10 +46,11 @@ class SchedContext:
     """Everything a policy may observe at one selection step."""
     now: float
     cluster: Cluster
-    window: List[Job]            # first W waiting jobs, arrival order
+    window: List[Job]            # first W waiting jobs, queue order
     queue_len: int
     running: List[Job]
-    queue: Optional[List[Job]] = None   # full waiting queue (arrival order)
+    queue: Optional[List[Job]] = None   # full waiting queue (sorted by
+    #                                     original submit time, then jid)
 
 
 class SchedulingPolicy(Protocol):
@@ -54,6 +67,11 @@ class SchedulingPolicy(Protocol):
 
 
 ENGINES = ("sequential", "vector", "device")
+
+# Application order for events coalesced at one timestamp.  Ends first
+# (a job finishing at t is NOT killed by a drain at t), then queue
+# entries, then drains, then restores — mirrored by the device pump.
+_KIND_ORDER = {"end": 0, "submit": 1, "release": 1, "drain": 2, "restore": 3}
 
 
 @dataclass
@@ -116,6 +134,8 @@ class SimResult:
     truncated_jobs: int = 0      # waiting jobs beyond the observable window,
     #                              summed over decisions (queue pressure the
     #                              classic W-window encoding cannot see)
+    requeues: int = 0            # killed attempts that re-entered the queue
+    n_failed: int = 0            # terminally FAILED jobs (incl. cascades)
 
     @property
     def started_jobs(self) -> List[Job]:
@@ -124,11 +144,13 @@ class SimResult:
 
 class Simulator:
     def __init__(self, resources: Sequence[ResourceSpec], jobs: Sequence[Job],
-                 policy, config: SimConfig | None = None):
+                 policy, config: SimConfig | None = None, *,
+                 faults: Optional[FaultSchedule] = None):
         self.cluster = Cluster(list(resources))
         self.jobs = sorted((j.copy() for j in jobs), key=lambda j: (j.submit, j.jid))
         self.policy = policy
         self.config = config or SimConfig()
+        self.lifecycle = JobLifecycle(self.jobs, self.cluster, faults=faults)
         self.queue: List[Job] = []
         self._events: List = []
         self._eseq = itertools.count()
@@ -144,11 +166,44 @@ class Simulator:
     def _push(self, time: float, kind: str, payload) -> None:
         heapq.heappush(self._events, (time, next(self._eseq), kind, payload))
 
+    def _is_stale(self, kind: str, payload) -> bool:
+        if kind == "end":
+            jid, attempt = payload
+            return self.lifecycle.is_stale_end(self.lifecycle.by_id[jid],
+                                               attempt)
+        if kind == "release":
+            return payload.state != ELIGIBLE
+        return False
+
     def _apply(self, kind: str, payload) -> None:
+        lc = self.lifecycle
         if kind == "submit":
-            self.queue.append(payload)
-        else:  # "end"
-            self.cluster.release_job(payload)
+            out, ready = lc.on_submit(payload, self.now)
+            if out == "queued":
+                insert_queued(self.queue, payload)
+            elif out == "eligible":
+                self._push(ready, "release", payload)
+        elif kind == "release":
+            if lc.on_release(payload):
+                insert_queued(self.queue, payload)
+        elif kind == "end":
+            jid, _attempt = payload
+            job = lc.by_id[jid]
+            out, released = lc.on_end(job, self.now)
+            if out == "requeued":
+                insert_queued(self.queue, job)
+            else:
+                for child, ready in released:
+                    if ready <= self.now:
+                        insert_queued(self.queue, child)
+                    else:
+                        self._push(ready, "release", child)
+        elif kind == "drain":
+            for job, out in lc.on_drain(payload, self.now):
+                if out == "requeued":
+                    insert_queued(self.queue, job)
+        else:  # "restore"
+            lc.on_restore(payload)
 
     # ------------------------------------------------------------ re-entrant
     def start(self) -> None:
@@ -159,6 +214,10 @@ class Simulator:
         self._n_events = 0
         for job in self.jobs:
             self._push(job.submit, "submit", job)
+        for d in self.lifecycle.faults.drains:
+            self._push(d.time, "drain", d)
+            if np.isfinite(d.duration):
+                self._push(d.time + d.duration, "restore", d)
 
     def next_decision(self) -> Optional[SchedContext]:
         """Advance the event loop until the policy must pick a window slot.
@@ -177,17 +236,33 @@ class Simulator:
                 self._in_pass = False
             if not self._events:
                 return None
+            # Pop the full coalesced batch at the next timestamp, dropping
+            # stale events.  An all-stale batch neither advances the clock
+            # nor opens a pass — the device pump has no such event at all.
+            # Likewise a submission that cannot join the queue yet (parents
+            # unfinished, or think-time pending) is applied WITHOUT
+            # advancing the clock: its queue entry is a later release/end
+            # event, which is the only event the device pump sees.
+            time = self._events[0][0]
+            batch = []
+            while self._events and self._events[0][0] == time:
+                _, seq, kind, payload = heapq.heappop(self._events)
+                if self._is_stale(kind, payload):
+                    continue
+                if (kind == "submit"
+                        and self.lifecycle.ready_time(payload) > time):
+                    self._apply(kind, payload)
+                    continue
+                batch.append((_KIND_ORDER[kind], seq, kind, payload))
+            if not batch:
+                continue
             self._n_events += 1
             if self._n_events > self.config.max_events:
                 raise RuntimeError("simulator exceeded max_events")
-            time, _, kind, payload = heapq.heappop(self._events)
             self.acc.advance(time)
             self.now = time
-            self._apply(kind, payload)
-            # Coalesce events at identical timestamps before scheduling.
-            while self._events and self._events[0][0] == time:
-                _, _, k2, p2 = heapq.heappop(self._events)
-                self._apply(k2, p2)
+            for _, _, kind, payload in sorted(batch):
+                self._apply(kind, payload)
             self._in_pass = True
 
     def post_action(self, action: int) -> None:
@@ -226,10 +301,11 @@ class Simulator:
         (e.g. demands exceeding capacity, so no event could free enough
         units).  Wait/slowdown metrics aggregate started jobs only — an
         unstarted job has no finite wait — but ``n_unstarted`` is reported
-        so starvation cannot pass silently.
+        so starvation cannot pass silently.  Failure cascades (children of
+        FAILED ancestors) are resolved here, inside ``summarize``.
         """
         started = [j for j in self.jobs if j.started]
-        metrics = self.acc.summarize(started)
+        metrics = self.acc.summarize(started, all_jobs=self.jobs)
         metrics.truncated_jobs = self.truncated
         return SimResult(
             metrics=metrics,
@@ -238,6 +314,8 @@ class Simulator:
             decisions=self.decisions,
             n_unstarted=len(self.jobs) - len(started),
             truncated_jobs=self.truncated,
+            requeues=metrics.requeues,
+            n_failed=metrics.n_failed,
         )
 
     # ------------------------------------------------------------ main loop
@@ -259,9 +337,9 @@ class Simulator:
         )
 
     def _start(self, job: Job) -> None:
-        self.cluster.allocate(job, self.now)
+        end = self.lifecycle.start(job, self.now)
         self.queue.remove(job)
-        self._push(job.end, "end", job.jid)
+        self._push(end, "end", (job.jid, job.requeues))
         self.acc.job_started(job)
 
     def _easy_backfill(self, reserved: Job) -> None:
@@ -270,7 +348,8 @@ class Simulator:
         A waiting job may jump ahead iff it fits now AND either (a) it is
         estimated to finish before the reservation start, or (b) at the
         reservation start the reserved job still fits with the backfilled
-        job occupying its units ("shadow" resources).
+        job occupying its units ("shadow" resources).  Drained units are
+        phantom reservations, so they participate automatically.
         """
         t_res = self.cluster.earliest_fit_time(reserved, self.now)
         if not np.isfinite(t_res):
@@ -298,7 +377,9 @@ class Simulator:
 
 
 def run_trace(resources, jobs, policy, window: int = 10,
-              backfill: bool = True) -> SimResult:
+              backfill: bool = True,
+              faults: Optional[FaultSchedule] = None) -> SimResult:
     """Convenience one-shot simulation."""
     return Simulator(resources, jobs, policy,
-                     sim_config(window=window, backfill=backfill)).run()
+                     sim_config(window=window, backfill=backfill),
+                     faults=faults).run()

@@ -37,6 +37,7 @@ import numpy as np
 
 from .cluster import ResourceSpec
 from .job import Job
+from .lifecycle import FaultSchedule
 from .simulator import SchedContext, SimConfig, SimResult, Simulator
 
 
@@ -90,19 +91,35 @@ class VectorSimulator:
             except (TypeError, ValueError):
                 pass
 
+    @staticmethod
+    def _fault_list(faults, n: int):
+        """Normalize the ``faults`` argument: None, one schedule shared by
+        every environment, or one (possibly None) schedule per jobset."""
+        if faults is None or isinstance(faults, FaultSchedule):
+            return [faults] * n
+        faults = list(faults)
+        if len(faults) != n:
+            raise ValueError(
+                f"got {len(faults)} fault schedules for {n} jobsets")
+        return faults
+
     @classmethod
     def from_jobsets(cls, resources: Sequence[ResourceSpec],
                      jobsets: Sequence[Sequence[Job]], policy,
-                     config: SimConfig | None = None) -> "VectorSimulator":
+                     config: SimConfig | None = None, *,
+                     faults=None) -> "VectorSimulator":
         """One environment per jobset, all sharing cluster spec and policy."""
-        sims = [Simulator(resources, jobs, policy, config) for jobs in jobsets]
+        flist = cls._fault_list(faults, len(jobsets))
+        sims = [Simulator(resources, jobs, policy, config, faults=f)
+                for jobs, f in zip(jobsets, flist)]
         return cls(sims, policy=policy)
 
     @classmethod
     def from_factory(cls, resources: Sequence[ResourceSpec],
                      jobsets: Sequence[Sequence[Job]],
                      policy_factory: Callable[[], object],
-                     config: SimConfig | None = None) -> "VectorSimulator":
+                     config: SimConfig | None = None, *,
+                     faults=None) -> "VectorSimulator":
         """One FRESH policy instance per environment, lockstep preserved.
 
         For stateful sequential policies (``GAOptimizer``'s cached plan,
@@ -112,8 +129,9 @@ class VectorSimulator:
         round interleaving — and therefore any refill/on_round driving —
         matches the batched policies, so matrix cells stay comparable.
         """
-        sims = [Simulator(resources, jobs, policy_factory(), config)
-                for jobs in jobsets]
+        flist = cls._fault_list(faults, len(jobsets))
+        sims = [Simulator(resources, jobs, policy_factory(), config, faults=f)
+                for jobs, f in zip(jobsets, flist)]
         return cls(sims, policy=None)
 
     # ---------------------------------------------------------------- run
@@ -190,9 +208,10 @@ class VectorSimulator:
 
 def run_traces(resources: Sequence[ResourceSpec],
                jobsets: Sequence[Sequence[Job]], policy, window: int = 10,
-               backfill: bool = True) -> List[SimResult]:
+               backfill: bool = True, faults=None) -> List[SimResult]:
     """Convenience batched counterpart of ``run_trace``."""
     vec = VectorSimulator.from_jobsets(
         resources, jobsets, policy,
-        SimConfig.for_engine("vector", window=window, backfill=backfill))
+        SimConfig.for_engine("vector", window=window, backfill=backfill),
+        faults=faults)
     return vec.run()

@@ -1,3 +1,4 @@
+from ..sim.lifecycle import DrainEvent, FaultSchedule
 from .drift import (DriftPhase, DriftSchedule, PhaseResult, apply_drift,
                     run_phases, segment_jobs, step_schedule)
 from .jobsets import Curriculum, build_curriculum, real_jobsets, sampled_jobsets, synthetic_jobsets
@@ -15,6 +16,7 @@ __all__ = [
     "scale_resources",
     "DriftPhase", "DriftSchedule", "PhaseResult", "apply_drift",
     "run_phases", "segment_jobs", "step_schedule",
+    "DrainEvent", "FaultSchedule",
     "ScenarioSpec", "build_jobs", "build_many", "get_scenario",
     "register", "register_swf", "scenario_names",
     "THETA_BB_UNITS", "THETA_NODES", "ThetaConfig",

@@ -49,12 +49,17 @@ class DriftPhase:
     the trace's own BB demands untouched.
     ``bb_scale`` / ``node_scale`` — multipliers on BB / node demands.
     ``rate_scale`` — arrival-rate multiplier (>1 compresses gaps).
+    ``fail_fraction`` — when set, jobs arriving in this phase are given a
+    mid-run failure point (one requeue-triggering fault drawn uniformly
+    inside the runtime) with this probability; ``None`` leaves any
+    ``fail_times`` already on the trace untouched, ``0.0`` strips them.
     """
     start: float
     bb_fraction: Optional[float] = None
     bb_scale: float = 1.0
     node_scale: float = 1.0
     rate_scale: float = 1.0
+    fail_fraction: Optional[float] = None
 
     def __post_init__(self):
         if not 0.0 <= self.start <= 1.0:
@@ -62,6 +67,10 @@ class DriftPhase:
         for name in _MULT_FIELDS:
             if getattr(self, name) <= 0:
                 raise ValueError(f"{name} must be > 0")
+        if (self.fail_fraction is not None
+                and not 0.0 <= self.fail_fraction <= 1.0):
+            raise ValueError(
+                f"fail_fraction must be in [0, 1], got {self.fail_fraction}")
 
 
 @dataclass(frozen=True)
@@ -107,6 +116,9 @@ class DriftSchedule:
             if cur.bb_fraction is not None and nxt.bb_fraction is not None:
                 out["bb_fraction"] = ((1 - w) * cur.bb_fraction
                                       + w * nxt.bb_fraction)
+            if cur.fail_fraction is not None and nxt.fail_fraction is not None:
+                out["fail_fraction"] = ((1 - w) * cur.fail_fraction
+                                        + w * nxt.fail_fraction)
         return out
 
 
@@ -154,6 +166,15 @@ def apply_drift(jobs: Sequence[Job], schedule: DriftSchedule,
         else:
             bb = nj.demands.get("bb", 0)
         nj.demands["bb"] = min(int(round(bb * p["bb_scale"])), cfg.bb_units)
+        if p["fail_fraction"] is not None:
+            # One mid-run fault per afflicted job; both draws are consumed
+            # even when the job stays healthy, so raising fail_fraction
+            # only adds failures instead of reshuffling which jobs fail.
+            u, at = rng.uniform(), rng.uniform(0.15, 0.85)
+            if u < p["fail_fraction"]:
+                nj.fail_times = (float(at * nj.runtime),)
+            else:
+                nj.fail_times = ()
         out.append(nj)
     return out
 

@@ -18,10 +18,21 @@ from .theta import ThetaConfig, generate_trace
 
 
 def _renumber(jobs: List[Job]) -> List[Job]:
+    """Reassign contiguous jids in submit order, remapping workflow edges.
+
+    ``deps`` reference jids from the source trace; a slice/sample that
+    renumbers without remapping would silently rewire DAGs onto unrelated
+    jobs.  Edges whose parent was not selected into this jobset are
+    dropped (the child behaves as a root), as are self-edges — a sampled
+    set that re-times jobs can otherwise not guarantee acyclicity."""
+    ordered = sorted(jobs, key=lambda x: x.submit)
+    remap = {j.jid: i for i, j in enumerate(ordered)}
     out = []
-    for i, j in enumerate(sorted(jobs, key=lambda x: x.submit)):
+    for i, j in enumerate(ordered):
         nj = j.copy()
         nj.jid = i
+        nj.deps = tuple(remap[d] for d in j.deps
+                        if d in remap and remap[d] != i)
         out.append(nj)
     return out
 

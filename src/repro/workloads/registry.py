@@ -25,6 +25,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from ..sim.job import Job
+from ..sim.lifecycle import DrainEvent, FaultSchedule
 from .drift import DriftPhase, DriftSchedule, apply_drift, step_schedule
 from .scenarios import SCENARIOS as _PAPER_SCENARIOS
 from .scenarios import build_scenarios, with_power
@@ -39,16 +40,21 @@ class ScenarioSpec:
 
     ``build(cfg, seed, **params)`` produces the trace; ``drift`` (when
     set) is applied afterwards with a seed derived from ``seed``; then
-    ``power`` attaches §V-E power profiles.  ``tags`` support filtered
-    selection (e.g. every "drift" scenario for the adaptation bench).
+    ``power`` attaches §V-E power profiles.  ``faults`` is NOT applied to
+    the trace — it is the scenario's deterministic node-outage plan, and
+    engines consume it directly (``Simulator(..., faults=...)``); runners
+    that build jobs from a name must forward ``get_scenario(name).faults``
+    alongside.  ``tags`` support filtered selection (e.g. every "drift"
+    scenario for the adaptation bench).
     """
     name: str
     description: str
     build: Builder
-    family: str = "synthetic"          # paper | base | synthetic | drift | swf
+    family: str = "synthetic"  # paper|base|synthetic|drift|workflow|faulty|swf
     params: Dict[str, object] = field(default_factory=dict)
     drift: Optional[DriftSchedule] = None
     power: bool = False
+    faults: Optional[FaultSchedule] = None
     tags: Tuple[str, ...] = ()
 
 
@@ -212,6 +218,91 @@ def _drifted_paper(cfg: ThetaConfig, seed: int,
     return _paper(cfg, seed, scenario=scenario)
 
 
+def _workflow_pipelines(cfg: ThetaConfig, seed: int, chain_len: int = 4,
+                        workflow_frac: float = 0.5,
+                        think_s: float = 300.0) -> List[Job]:
+    """Linear pipeline DAGs: stage k depends on stage k-1.
+
+    Walks the base trace in submit order and, with probability
+    ``workflow_frac``, folds the next ``chain_len`` jobs into one
+    pipeline: all stages are submitted with the root (the user submits
+    the whole workflow at once) but each stays HELD until its predecessor
+    finishes plus ``think_s`` of post-processing think time.
+    """
+    jobs = sorted(generate_trace(_reseeded(cfg, seed)),
+                  key=lambda j: (j.submit, j.jid))
+    rng = np.random.default_rng(5000 + seed)
+    out = [j.copy() for j in jobs]
+    i = 0
+    while i + chain_len <= len(out):
+        if rng.uniform() < workflow_frac:
+            root = out[i]
+            for k in range(1, chain_len):
+                stage = out[i + k]
+                stage.deps = (out[i + k - 1].jid,)
+                stage.think_time = float(think_s)
+                stage.submit = root.submit
+            i += chain_len
+        else:
+            i += 1
+    return sorted(out, key=lambda j: (j.submit, j.jid))
+
+
+def _workflow_ensembles(cfg: ThetaConfig, seed: int, width: int = 4,
+                        ensemble_frac: float = 0.4,
+                        think_s: float = 60.0) -> List[Job]:
+    """Fan-out/fan-in DAGs: root -> ``width`` members -> collector.
+
+    The ensemble members run concurrently once the root finishes; the
+    collector fans in on ALL members (a multi-parent dependency, which a
+    linear SWF "preceding job" field cannot express).
+    """
+    jobs = sorted(generate_trace(_reseeded(cfg, seed)),
+                  key=lambda j: (j.submit, j.jid))
+    rng = np.random.default_rng(6000 + seed)
+    out = [j.copy() for j in jobs]
+    group = width + 2
+    i = 0
+    while i + group <= len(out):
+        if rng.uniform() < ensemble_frac:
+            root = out[i]
+            members = out[i + 1: i + 1 + width]
+            collector = out[i + 1 + width]
+            for m in members:
+                m.deps = (root.jid,)
+                m.think_time = float(think_s)
+                m.submit = root.submit
+            collector.deps = tuple(m.jid for m in members)
+            collector.think_time = float(think_s)
+            collector.submit = root.submit
+            i += group
+        else:
+            i += 1
+    return sorted(out, key=lambda j: (j.submit, j.jid))
+
+
+def _faulty_jobs(cfg: ThetaConfig, seed: int, fail_fraction: float = 0.2,
+                 max_attempts: int = 2) -> List[Job]:
+    """Base trace where a fraction of jobs carry mid-run failure points.
+
+    Afflicted jobs fail 1..``max_attempts`` times at uniform positions
+    within the runtime before an attempt finally survives, exercising the
+    requeue path (and FAILED exhaustion when attempts exceed the
+    schedule's ``max_requeues``).
+    """
+    rng = np.random.default_rng(4000 + seed)
+    out = []
+    for j in generate_trace(_reseeded(cfg, seed)):
+        nj = j.copy()
+        if rng.uniform() < fail_fraction:
+            k = int(rng.integers(1, max_attempts + 1))
+            nj.fail_times = tuple(
+                float(f) * nj.runtime
+                for f in sorted(rng.uniform(0.15, 0.85, size=k)))
+        out.append(nj)
+    return out
+
+
 def register_swf(name: str, path: str, description: str = "",
                  overwrite: bool = False) -> ScenarioSpec:
     """Register a real-trace replay scenario backed by an SWF file.
@@ -306,6 +397,45 @@ def _register_defaults() -> None:
         description="§V-D shift: S3 trace flipping from CPU-heavy "
                     "(nodes x1.6, BB 20%) to BB-heavy (nodes x0.7, BB 80%)",
         tags=("drift", "node", "bb")))
+    register(ScenarioSpec(
+        name="workflow-pipelines", family="workflow",
+        build=_workflow_pipelines,
+        description="Half the trace folded into 4-stage pipeline DAGs "
+                    "(submit-with-root, 5 min think time between stages)",
+        tags=("workflow", "deps")))
+    register(ScenarioSpec(
+        name="workflow-ensembles", family="workflow",
+        build=_workflow_ensembles,
+        description="Fan-out/fan-in ensembles: root -> 4 members -> "
+                    "collector (multi-parent fan-in joins)",
+        tags=("workflow", "deps")))
+    register(ScenarioSpec(
+        name="faulty-jobs", family="faulty", build=_faulty_jobs,
+        description="20% of jobs fail mid-run up to 2 times before an "
+                    "attempt survives (requeue stress)",
+        tags=("faulty", "requeue")))
+    register(ScenarioSpec(
+        name="faulty-drain", family="faulty", build=_theta_base,
+        faults=FaultSchedule(relative=True, drains=(
+            DrainEvent(time=0.30, resource="node", unit_frac=0.25,
+                       duration=0.15),
+            DrainEvent(time=0.60, resource="bb", unit_frac=0.30,
+                       duration=0.10),
+        )),
+        description="Base trace under scheduled outages: 25% of nodes "
+                    "drain at 30% of the span (15% long), 30% of BB at "
+                    "60% (10% long); residents are killed and requeued",
+        tags=("faulty", "drain")))
+    register(ScenarioSpec(
+        name="drift-failure-wave", family="drift", build=_drifted_paper,
+        params={"scenario": "S1"},
+        drift=DriftSchedule(phases=(
+            DriftPhase(start=0.0, fail_fraction=0.0),
+            DriftPhase(start=0.4, fail_fraction=0.30),
+            DriftPhase(start=0.8, fail_fraction=0.0))),
+        description="§V-D-style reliability shift: a mid-trace wave where "
+                    "30% of arriving jobs fail once mid-run and requeue",
+        tags=("drift", "faulty", "requeue")))
 
 
 _register_defaults()

@@ -19,8 +19,51 @@ def test_registry_covers_every_family():
     assert {"theta-base", "diurnal-heavy", "bursty-campaigns",
             "size-skew-small", "size-skew-large"} <= names
     assert set(scenario_names(family="drift")) == {
-        "drift-bb-surge", "drift-arrival-ramp", "drift-node-shift"}
+        "drift-bb-surge", "drift-arrival-ramp", "drift-node-shift",
+        "drift-failure-wave"}
+    assert set(scenario_names(family="workflow")) == {
+        "workflow-pipelines", "workflow-ensembles"}
+    assert set(scenario_names(family="faulty")) == {
+        "faulty-jobs", "faulty-drain"}
     assert set(scenario_names(tag="power")) == {f"S{i}" for i in range(6, 11)}
+
+
+def test_workflow_scenarios_build_dags():
+    from repro.sim.lifecycle import workflow_components
+    for name in ("workflow-pipelines", "workflow-ensembles"):
+        jobs = build_jobs(name, CFG, seed=1)
+        comps = workflow_components(jobs)
+        assert comps, name
+        jids = {j.jid for j in jobs}
+        for j in jobs:
+            assert set(j.deps) <= jids and j.jid not in j.deps
+            if j.deps:
+                assert j.think_time >= 0.0
+    # Ensembles contain fan-in joins (a job with >1 parent).
+    ens = build_jobs("workflow-ensembles", CFG, seed=1)
+    assert any(len(j.deps) > 1 for j in ens)
+
+
+def test_faulty_scenarios_carry_failure_plan():
+    jobs = build_jobs("faulty-jobs", CFG, seed=1)
+    afflicted = [j for j in jobs if j.fail_times]
+    assert 0 < len(afflicted) < len(jobs)
+    for j in afflicted:
+        assert all(0.0 < f < j.runtime for f in j.fail_times)
+    # faulty-drain puts the plan on the spec, not the jobs.
+    spec = get_scenario("faulty-drain")
+    assert spec.faults is not None and spec.faults.relative
+    assert not any(j.fail_times for j in build_jobs("faulty-drain", CFG, seed=1))
+
+
+def test_drift_failure_wave_is_mid_trace_only():
+    jobs = sorted(build_jobs("drift-failure-wave", CFG, seed=1),
+                  key=lambda j: j.submit)
+    t0, t1 = jobs[0].submit, jobs[-1].submit
+    frac = [(j.submit - t0) / max(t1 - t0, 1e-9)
+            for j in jobs if j.fail_times]
+    assert frac, "wave injected no failures"
+    assert min(frac) >= 0.35 and max(frac) <= 0.85
 
 
 def test_unknown_scenario_lists_known_names():

@@ -59,6 +59,33 @@ def test_invariants_hold_for_every_job(jobs):
         assert j.demands["bb"] == 0
 
 
+def test_workflow_dep_and_think_parsed(jobs):
+    j2 = next(j for j in jobs if j.jid == 2)
+    assert j2.deps == (1,) and j2.think_time == 120.0
+
+
+def test_negative_think_clamped(jobs):
+    j3 = next(j for j in jobs if j.jid == 3)
+    assert j3.deps == (2,) and j3.think_time == 0.0
+
+
+def test_bogus_predecessors_dropped(jobs):
+    # jid 1: forward reference; jid 5: self; jid 6: parent row was
+    # unschedulable; jid 9: SWF 0 = "no predecessor" (its stray think
+    # time is discarded with the edge).
+    for jid in (1, 5, 6, 9):
+        j = next(j for j in jobs if j.jid == jid)
+        assert j.deps == () and j.think_time == 0.0
+
+
+def test_truncation_never_leaves_dangling_deps():
+    for k in range(1, 7):
+        got = jobs_from_swf(str(FIXTURE), n_nodes=256, max_jobs=k)
+        kept = {j.jid for j in got}
+        for j in got:
+            assert set(j.deps) <= kept
+
+
 def test_max_jobs_truncates():
     got = jobs_from_swf(str(FIXTURE), n_nodes=256, max_jobs=2)
     assert len(got) == 2

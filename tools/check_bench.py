@@ -12,10 +12,13 @@ gate, keep deterministic metric rows and generous-tolerance throughput).
 Numeric comparison is direction-aware by key name:
 
 * higher-is-better (``*speedup*``, ``*per_sec*``, ``*throughput*``,
-  ``util_*``): only a *drop* below ``base * (1 - rtol)`` fails;
+  ``util_*``, ``*_frac*`` e.g. completed-work fraction): only a *drop*
+  below ``base * (1 - rtol)`` fails;
 * lower-is-better (``*_us``, ``*_ms``, ``*seconds*``, ``*latency*``,
-  ``*wait*``, ``*slowdown*``, ``*loss*``): only a *rise* above
-  ``base * (1 + rtol)`` fails;
+  ``*wait*``, ``*slowdown*``, ``*loss*``, ``*makespan*`` incl. the
+  workflow pipeline makespan, ``*requeues*``, ``*n_failed*``,
+  ``failed_*`` node-hours): only a *rise* above ``base * (1 + rtol)``
+  fails;
 * anything else: two-sided relative error > rtol fails.
 
 Non-numeric leaves (schema strings, ``equivalent`` flags) must match
@@ -29,9 +32,10 @@ import json
 import sys
 from typing import Any, Dict, List
 
-HIGHER_IS_BETTER = ("speedup", "per_sec", "throughput", "util_")
+HIGHER_IS_BETTER = ("speedup", "per_sec", "throughput", "util_", "_frac")
 LOWER_IS_BETTER = ("_us", "_ms", "seconds", "latency", "wait",
-                   "slowdown", "loss")
+                   "slowdown", "loss", "makespan", "requeues",
+                   "n_failed", "failed_")
 
 
 def _direction(key: str) -> str:
