@@ -30,12 +30,14 @@ from __future__ import annotations
 
 import argparse
 import os
+import sys
 import time
 
 from repro.core import (AgentConfig, FCFSPolicy, GAConfig, GAOptimizer,
                         MRSchAgent, evaluate)
-from repro.eval import (MatrixConfig, default_policies, eval_factory,
-                        run_matrix, save_matrix)
+from repro.eval import (MatrixConfig, TournamentConfig, default_policies,
+                        eval_factory, run_matrix, run_tournament, save_matrix,
+                        save_tournament, zoo_policies)
 from repro.workloads import (build_curriculum, build_jobs, build_scenarios,
                              build_sweep, get_scenario, run_phases, run_sweep,
                              segment_jobs)
@@ -122,7 +124,8 @@ def _matrix_agent(res, seed: int = 0) -> MRSchAgent:
 
 
 def run_matrix_bench(smoke: bool = True, vector: int = 4, seed: int = 0,
-                     agent: MRSchAgent | None = None):
+                     agent: MRSchAgent | None = None,
+                     scenarios=None, seeds=None):
     """Policy x scenario grid on the vector engine -> matrix.json/.csv.
 
     Smoke sizing (the CI lane): 3 registry scenarios — one per family
@@ -132,13 +135,76 @@ def run_matrix_bench(smoke: bool = True, vector: int = 4, seed: int = 0,
     days, jobs_day = (0.6, 120) if smoke else (2.0, 220)
     cfg, res = mini_setup(seed=seed, duration_days=days, jobs_per_day=jobs_day)
     policies = default_policies(res, agent=agent or _matrix_agent(res, seed))
-    mcfg = MatrixConfig(scenarios=SMOKE_MATRIX if smoke else FULL_MATRIX,
-                        seeds=(1,) if smoke else (1, 2), vector=vector)
+    mcfg = MatrixConfig(
+        scenarios=tuple(scenarios) if scenarios
+        else (SMOKE_MATRIX if smoke else FULL_MATRIX),
+        seeds=tuple(seeds) if seeds else ((1,) if smoke else (1, 2)),
+        vector=vector)
     matrix = run_matrix(policies, res, cfg, mcfg)
     json_path, csv_path = save_matrix(
         matrix, os.path.join(RESULTS, "matrix.json"))
     matrix["paths"] = {"json": json_path, "csv": csv_path}
     return matrix
+
+
+# The standing tournament (--tournament): the full baseline zoo — the
+# paper's four methods plus PRB-EWT, the CP window-packing dispatcher,
+# the DRAS-style two-level agent, and the RL co-scheduler variant —
+# round-robin over one scenario per registry family class.
+TOURNAMENT_SMOKE = ("S2", "bursty-campaigns", "drift-bb-surge",
+                    "workflow-pipelines")
+TOURNAMENT_FULL = FULL_MATRIX
+
+
+def run_tournament_bench(smoke: bool = True, vector: int = 4, seed: int = 0,
+                         agent: MRSchAgent | None = None,
+                         scenarios=None, seeds=None):
+    """Baseline-zoo round-robin -> tournament.json + leaderboard.md.
+
+    Smoke sizing: 8 policies x 4 scenarios (one per family class) x 1
+    seed, untrained NN entrants (the standings mechanics and the
+    per-policy gate aggregates don't depend on the weights — the
+    paper-faithful standings load trained checkpoints via ``agent``).
+    Deterministic for a fixed seed; ``tools/check_bench.py`` gates the
+    ``per_policy`` section against the committed baseline.
+    """
+    days, jobs_day = (0.6, 120) if smoke else (2.0, 220)
+    cfg, res = mini_setup(seed=seed, duration_days=days, jobs_per_day=jobs_day)
+    policies = zoo_policies(res, agent=agent or _matrix_agent(res, seed),
+                            seed=seed)
+    tcfg = TournamentConfig(
+        scenarios=tuple(scenarios) if scenarios
+        else (TOURNAMENT_SMOKE if smoke else TOURNAMENT_FULL),
+        seeds=tuple(seeds) if seeds else ((1,) if smoke else (1, 2)),
+        vector=vector)
+    t = run_tournament(policies, res, cfg, tcfg)
+    json_path, md_path = save_tournament(
+        t, os.path.join(RESULTS, "tournament.json"))
+    t["paths"] = {"json": json_path, "md": md_path}
+    return t
+
+
+def summarize_tournament(t) -> str:
+    s = t["summary"]
+    imp = t["relative_improvement"]
+    lines = [f"tournament[{t['schema']}]: {s['n_policies']} policies x "
+             f"{len(t['config']['scenarios'])} scenarios x "
+             f"{len(t['config']['seeds'])} seeds = {s['n_cells']} cells in "
+             f"{s['wall_seconds']:.1f}s; leader={s['leader']}"]
+    if imp["max"] is not None:
+        lines.append(f"  {imp['reference']} wait improvement: "
+                     f"max {imp['max']:+.1%} "
+                     + " ".join(f"{p}={v:+.1%}"
+                                for p, v in sorted(imp["vs"].items())))
+    for e in t["leaderboard"]:
+        lines.append(f"  #{e['rank']} {e['policy']}: "
+                     f"overall={e['overall_score']:.4f} wins={e['wins']} "
+                     f"wait={e['avg_wait']:.0f}s")
+    for f in s["failures"]:
+        lines.append(f"  FAILED {f['policy']}: {f['error']} "
+                     f"({len(f['cells'])} cells)")
+    lines.append(f"  -> {t.get('paths', {}).get('json', 'results/bench/tournament.json')}")
+    return "\n".join(lines)
 
 
 def summarize_matrix(matrix) -> str:
@@ -186,6 +252,7 @@ def run_faults_bench(smoke: bool = True, vector: int = 4, seed: int = 0):
             "n_cells": len(matrix["rows"]),
             "faulty_scenarios_requeue": any_requeues > 0,
             "workflow_scenarios_pipeline": any_pipelines,
+            "failures": matrix["summary"]["failures"],
             "wall_seconds": matrix["summary"]["wall_seconds"],
         },
     }
@@ -327,7 +394,18 @@ def summarize_sweep(sw) -> str:
             f"equivalent={sw['equivalent']}")
 
 
-if __name__ == "__main__":
+def _grid_exit(summary) -> int:
+    """Exit status for grid benches: any policy crashing mid-grid makes
+    the run a failure even though the surviving rows were written (the
+    partial JSON is still uploaded as evidence)."""
+    fails = summary.get("failures") or []
+    for f in fails:
+        print(f"FAILED policy {f['policy']}: {f['error']} "
+              f"({len(f['cells'])} cells lost)", file=sys.stderr)
+    return 1 if fails else 0
+
+
+def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--vector", type=int, default=0,
@@ -337,24 +415,51 @@ if __name__ == "__main__":
     ap.add_argument("--matrix", action="store_true",
                     help="policy x scenario registry grid "
                          "-> results/bench/matrix.json/.csv")
+    ap.add_argument("--tournament", action="store_true",
+                    help="baseline-zoo round-robin + leaderboard "
+                         "-> results/bench/tournament.json + leaderboard.md")
     ap.add_argument("--drift", action="store_true",
                     help="§V-D adaptation: per-phase metrics across a "
                          "mid-trace workload shift -> results/bench/drift.json")
     ap.add_argument("--faults", action="store_true",
                     help="lifecycle grid: workflow DAGs + fault injection "
                          "-> results/bench/faults.json")
-    args = ap.parse_args()
+    ap.add_argument("--scenarios", default=None,
+                    help="comma-separated registry scenario subset for "
+                         "--matrix/--tournament (default: the lane's grid)")
+    ap.add_argument("--seeds", type=int, default=0,
+                    help="number of seeds (1..N) for --matrix/--tournament "
+                         "(default: the lane's seed set)")
+    args = ap.parse_args(argv)
     if args.vector < 0:
         ap.error(f"--vector must be >= 0, got {args.vector}")
+    if args.seeds < 0:
+        ap.error(f"--seeds must be >= 0, got {args.seeds}")
+    scenarios = tuple(s for s in (args.scenarios or "").split(",") if s) or None
+    seeds = tuple(range(1, args.seeds + 1)) if args.seeds else None
+    if args.tournament:
+        t = run_tournament_bench(smoke=args.smoke, vector=args.vector or 4,
+                                 scenarios=scenarios, seeds=seeds)
+        print(summarize_tournament(t))
+        return _grid_exit(t["summary"])
     if args.matrix:
-        print(summarize_matrix(run_matrix_bench(smoke=args.smoke,
-                                                vector=args.vector or 4)))
-    elif args.faults:
-        print(summarize_faults(run_faults_bench(smoke=args.smoke,
-                                                vector=args.vector or 4)))
-    elif args.drift:
+        m = run_matrix_bench(smoke=args.smoke, vector=args.vector or 4,
+                             scenarios=scenarios, seeds=seeds)
+        print(summarize_matrix(m))
+        return _grid_exit(m["summary"])
+    if args.faults:
+        out = run_faults_bench(smoke=args.smoke, vector=args.vector or 4)
+        print(summarize_faults(out))
+        return _grid_exit(out["summary"])
+    if args.drift:
         print(summarize_drift(run_drift_bench(smoke=args.smoke)))
-    elif args.smoke:
+        return 0
+    if args.smoke:
         print(summarize_sweep(run_smoke(vector=args.vector or 4)))
-    else:
-        print(summarize(run(quick=not args.full, vector=args.vector)))
+        return 0
+    print(summarize(run(quick=not args.full, vector=args.vector)))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

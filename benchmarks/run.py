@@ -16,6 +16,16 @@ import time
 import traceback
 
 
+def _raise_on_grid_failures(summary) -> None:
+    """A policy crashing mid-grid is a bench failure, not a smaller grid."""
+    fails = summary.get("failures") or []
+    if fails:
+        raise RuntimeError(
+            "policy failures: " + "; ".join(
+                f"{f['policy']} ({len(f['cells'])} cells): {f['error']}"
+                for f in fails))
+
+
 def _run(name, fn, **kw):
     t0 = time.time()
     try:
@@ -46,8 +56,17 @@ def _derived(name, out) -> str:
         return derived
     if name == "eval_matrix":
         s = out["summary"]
+        _raise_on_grid_failures(s)
         return (f"cells={s['n_cells']};wins="
                 + "/".join(f"{k}:{v}" for k, v in s["wins"].items()))
+    if name == "tournament":
+        s = out["summary"]
+        _raise_on_grid_failures(s)
+        imp = out["relative_improvement"]
+        derived = f"policies={s['n_policies']};leader={s['leader']}"
+        if imp["max"] is not None:
+            derived += f";{imp['reference']}_wait_cut_max={imp['max']:+.1%}"
+        return derived
     if name == "queue_encoder_ab":
         ratios = out["wait_ratio_attention_vs_mlp"]
         trained = out["loss"]["attention"]["decreased"]
@@ -147,6 +166,8 @@ def main(argv=None) -> int:
         "scheduling_fig5_6_7": lambda: bench_scheduling.run(
             quick=quick, vector=args.vector),
         "eval_matrix": lambda: bench_scheduling.run_matrix_bench(
+            smoke=quick, vector=args.vector or 4),
+        "tournament": lambda: bench_scheduling.run_tournament_bench(
             smoke=quick, vector=args.vector or 4),
         "serving": lambda: bench_serving.run(
             quick=quick,

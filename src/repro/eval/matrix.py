@@ -135,6 +135,12 @@ def run_matrix(policies: Mapping[str, PolicyFactory],
     Traces are built once per cell and shared across policies, so every
     policy sees the identical workload.  Policies exposing ``training``
     are forced into evaluation mode for the run (restored afterwards).
+
+    Partial-failure contract: one policy crashing must not silently
+    shrink the grid.  Its remaining cells are recorded under
+    ``summary.failures`` (with the exception text) while every other
+    policy's rows are kept; callers that need a hard stop check
+    ``summary.failures`` and exit non-zero (the bench entry points do).
     """
     _check_power(cfg.scenarios, resources)
     t0 = time.perf_counter()
@@ -145,9 +151,16 @@ def run_matrix(policies: Mapping[str, PolicyFactory],
     sim_cfg = SimConfig.for_engine("vector", window=cfg.window,
                                    backfill=cfg.backfill)
     rows: List[Dict] = []
+    failures: List[Dict] = []
     batched_policies = 0
     for name, factory in policies.items():
-        probe = factory()
+        try:
+            probe = factory()
+        except Exception as e:
+            failures.append({"policy": name,
+                             "cells": [list(c) for c in cells],
+                             "error": f"{type(e).__name__}: {e}"})
+            continue
         batched = supports_batch(probe)
         batched_policies += bool(batched)
         # Batched policies share the probe instance, so eval mode is
@@ -157,24 +170,36 @@ def run_matrix(policies: Mapping[str, PolicyFactory],
         if was_training:
             probe.training = False
         width = max(cfg.vector, 1)
-        for i in range(0, len(cells), width):
-            chunk = cells[i:i + width]
-            jobsets = [traces[c] for c in chunk]
-            # Scenario fault plans ride alongside the trace: the engine
-            # consumes them directly (they are not job attributes).
-            flist = [get_scenario(s).faults for s, _ in chunk]
-            if batched:
-                vec = VectorSimulator.from_jobsets(resources, jobsets,
-                                                   probe, sim_cfg,
-                                                   faults=flist)
-            else:
-                vec = VectorSimulator.from_factory(resources, jobsets,
-                                                   eval_factory(factory),
-                                                   sim_cfg, faults=flist)
-            for (scenario, seed), result in zip(chunk, vec.run()):
-                rows.append(_row(name, scenario, seed, result, resources))
-        if was_training:
-            probe.training = was_training
+        try:
+            for i in range(0, len(cells), width):
+                chunk = cells[i:i + width]
+                jobsets = [traces[c] for c in chunk]
+                # Scenario fault plans ride alongside the trace: the engine
+                # consumes them directly (they are not job attributes).
+                flist = [get_scenario(s).faults for s, _ in chunk]
+                try:
+                    if batched:
+                        vec = VectorSimulator.from_jobsets(resources, jobsets,
+                                                           probe, sim_cfg,
+                                                           faults=flist)
+                    else:
+                        vec = VectorSimulator.from_factory(resources, jobsets,
+                                                           eval_factory(factory),
+                                                           sim_cfg,
+                                                           faults=flist)
+                    chunk_results = vec.run()
+                except Exception as e:
+                    # All cells this policy has not completed are failed —
+                    # a crash mid-grid must not read as a smaller grid.
+                    failures.append({"policy": name,
+                                     "cells": [list(c) for c in cells[i:]],
+                                     "error": f"{type(e).__name__}: {e}"})
+                    break
+                for (scenario, seed), result in zip(chunk, chunk_results):
+                    rows.append(_row(name, scenario, seed, result, resources))
+        finally:
+            if was_training:
+                probe.training = was_training
     return {
         "schema": MATRIX_SCHEMA,
         "columns": matrix_columns(resources),
@@ -191,6 +216,8 @@ def run_matrix(policies: Mapping[str, PolicyFactory],
             "n_cells": len(rows),
             "batched_policies": batched_policies,
             "wins": _wins(rows),
+            "failures": failures,
+            "n_failed_cells": sum(len(f["cells"]) for f in failures),
             "wall_seconds": round(time.perf_counter() - t0, 3),
         },
     }

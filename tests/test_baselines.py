@@ -1,0 +1,97 @@
+"""Baseline zoo contracts: every entrant is deterministic, its batched
+decisions match its single-context decisions, and the sequential engine
+and the lockstep vector engine produce identical trajectories for it on
+registry scenarios (>= 2 per policy — the engine-parity gate every new
+zoo member must pass)."""
+import pytest
+
+from repro.baselines import (CoSchedConfig, CoSchedPolicy, CPConfig,
+                             CPDispatcher, DRASConfig, DRASPolicy, PRBConfig,
+                             PRBPolicy)
+from repro.core.policy_api import supports_batch, supports_device
+from repro.sim import SimConfig, Simulator, run_trace, run_traces
+from repro.workloads import ThetaConfig
+from repro.workloads.registry import build_jobs
+
+CFG = ThetaConfig.mini(seed=0, duration_days=0.35, jobs_per_day=140)
+RES = CFG.resources()
+SCENARIOS = ("S2", "bursty-campaigns")      # two registry scenarios
+
+
+def make(name):
+    """Fresh zoo instance (same construction the tournament uses)."""
+    return {
+        "PRB-EWT": lambda: PRBPolicy(RES, PRBConfig()),
+        "CP-Dispatch": lambda: CPDispatcher(CPConfig()),
+        "DRAS": lambda: DRASPolicy(RES, DRASConfig(seed=0)),
+        "CoSchedRL": lambda: CoSchedPolicy(RES, CoSchedConfig(seed=0)),
+    }[name]()
+
+
+ZOO = ("PRB-EWT", "CP-Dispatch", "DRAS", "CoSchedRL")
+
+
+def assert_results_equal(a, b):
+    assert a.metrics.as_row() == b.metrics.as_row()
+    assert a.decisions == b.decisions
+    assert a.n_unstarted == b.n_unstarted
+    assert [(j.jid, j.start, j.end) for j in a.jobs] \
+        == [(j.jid, j.start, j.end) for j in b.jobs]
+
+
+@pytest.fixture(scope="module")
+def traces():
+    return [build_jobs(s, CFG, seed=1) for s in SCENARIOS]
+
+
+@pytest.mark.parametrize("name", ZOO)
+def test_zoo_is_batchable(name):
+    policy = make(name)
+    assert supports_batch(policy)
+    # the pure score_window entrants also qualify for the device engine
+    if name != "CP-Dispatch":
+        assert supports_device(policy)
+
+
+@pytest.mark.parametrize("name", ZOO)
+def test_sequential_equals_vector_on_registry_scenarios(name, traces):
+    """Engine parity: the lockstep vector engine must not change any
+    trajectory vs one-at-a-time sequential simulation."""
+    policy = make(name)
+    seq = [run_trace(RES, js, policy) for js in traces]
+    vec = run_traces(RES, traces, policy)
+    for a, b in zip(seq, vec):
+        assert_results_equal(a, b)
+        assert b.decisions > 0              # the policy actually ran
+
+
+@pytest.mark.parametrize("name", ZOO)
+def test_zoo_policy_is_deterministic(name, traces):
+    """Two fresh instances (same config/seed) schedule identically."""
+    a = run_traces(RES, traces, make(name))
+    b = run_traces(RES, traces, make(name))
+    for ra, rb in zip(a, b):
+        assert_results_equal(ra, rb)
+
+
+@pytest.mark.parametrize("name", ZOO)
+def test_select_batch_matches_select(name, traces):
+    """One batched call over N contexts == N single calls, row for row."""
+    policy = make(name)
+    sims = [Simulator(RES, js, policy, SimConfig(window=10)) for js in traces]
+    ctxs = [s.next_decision() for s in sims]
+    assert all(c is not None for c in ctxs)
+    batch = [int(a) for a in policy.select_batch(ctxs)]
+    assert batch == [int(policy.select(c)) for c in ctxs]
+
+
+def test_zoo_entrants_differ_from_each_other(traces):
+    """The zoo adds signal, not four FCFS clones: on a contended trace
+    the entrants' decision sequences are not all identical."""
+    outcomes = {name: tuple(r.decisions for r in run_traces(RES, traces,
+                                                            make(name)))
+                for name in ZOO}
+    starts = {name: tuple(j.start for r in run_traces(RES, traces, make(name))
+                          for j in r.jobs)
+              for name in ZOO}
+    assert len(set(starts.values())) > 1, outcomes

@@ -1,0 +1,219 @@
+"""Tournament schema stability, standings math, the partial-failure
+contract (a crashing policy fails the bench, never shrinks the grid),
+and the check_bench gate-override/summary paths the nightly lane uses."""
+import importlib.util
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.eval import (TOURNAMENT_SCHEMA, TournamentConfig,
+                        leaderboard_columns, render_leaderboard,
+                        run_tournament, save_tournament, zoo_policies)
+from repro.eval.matrix import matrix_columns
+from repro.eval.tournament import _ranks
+from repro.workloads import ThetaConfig
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def _load(name, rel):
+    spec = importlib.util.spec_from_file_location(name, REPO / rel)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+check_bench = _load("check_bench", "tools/check_bench.py")
+
+SCENARIOS = ("S2", "bursty-campaigns")
+
+
+@pytest.fixture(scope="module")
+def mini():
+    cfg = ThetaConfig.mini(seed=0, duration_days=0.4, jobs_per_day=140)
+    return cfg, cfg.resources()
+
+
+@pytest.fixture(scope="module")
+def tourney(mini):
+    cfg, res = mini
+    pols = zoo_policies(res)    # paper methods (no agent) + the zoo = 7
+    return run_tournament(pols, res, cfg, TournamentConfig(
+        scenarios=SCENARIOS, seeds=(1,), vector=4))
+
+
+# ------------------------------------------------------------------ schema
+def test_tournament_schema_and_pinned_columns(tourney, mini):
+    _, res = mini
+    assert tourney["schema"] == TOURNAMENT_SCHEMA
+    assert tourney["columns"] == matrix_columns(res)   # rows = matrix schema
+    # leaderboard column order is part of the schema contract — pinned
+    # literally, not recomputed, so accidental reorders fail loudly
+    assert tourney["leaderboard_columns"] == [
+        "rank", "policy", "overall_score", "wins", "h2h_win_rate",
+        "avg_wait", "avg_slowdown", "p95_wait", "util_node", "util_bb",
+        "wait_improvement_vs"]
+    assert tourney["leaderboard_columns"] == leaderboard_columns(res)
+    for entry in tourney["leaderboard"]:
+        assert list(entry) == tourney["leaderboard_columns"]
+
+
+def test_full_zoo_round_robin(tourney):
+    assert tourney["summary"]["n_policies"] == 7
+    assert tourney["summary"]["n_cells"] == 7 * len(SCENARIOS)
+    assert not tourney["summary"]["failures"]
+    pols = {e["policy"] for e in tourney["leaderboard"]}
+    assert {"FCFS", "GA", "ScalarRL", "PRB-EWT", "CP-Dispatch", "DRAS",
+            "CoSchedRL"} == pols
+
+
+def test_leaderboard_rank_computation(tourney):
+    """rank 1..N follows overall_score descending (name tie-break)."""
+    lb = tourney["leaderboard"]
+    assert [e["rank"] for e in lb] == list(range(1, len(lb) + 1))
+    key = [(-e["overall_score"], e["policy"]) for e in lb]
+    assert key == sorted(key)
+    assert tourney["summary"]["leader"] == lb[0]["policy"]
+    # per-metric ranks are permutations of 1..N
+    for metric, ranks in tourney["ranks"].items():
+        assert sorted(ranks.values()) == list(range(1, len(lb) + 1)), metric
+
+
+def test_ranks_direction_and_tiebreak():
+    agg = {"A": {"avg_wait": 10.0}, "B": {"avg_wait": 5.0},
+           "C": {"avg_wait": 10.0}}
+    assert _ranks(agg, "avg_wait", lower_is_better=True) \
+        == {"B": 1, "A": 2, "C": 3}
+    assert _ranks(agg, "avg_wait", lower_is_better=False) \
+        == {"A": 1, "C": 2, "B": 3}
+
+
+def test_head_to_head_is_antisymmetric(tourney):
+    h2h = tourney["head_to_head"]
+    for p in h2h:
+        for q, rate in h2h[p].items():
+            assert 0.0 <= rate <= 1.0
+            # strict wins: p-beats-q and q-beats-p can't both exceed 1
+            assert rate + h2h[q][p] <= 1.0 + 1e-9
+
+
+def test_tournament_is_deterministic(tourney, mini):
+    cfg, res = mini
+    again = run_tournament(zoo_policies(res), res, cfg, TournamentConfig(
+        scenarios=SCENARIOS, seeds=(1,), vector=4))
+    assert again["rows"] == tourney["rows"]
+    assert again["leaderboard"] == tourney["leaderboard"]
+    assert again["per_policy"] == tourney["per_policy"]
+    assert again["head_to_head"] == tourney["head_to_head"]
+
+
+def test_render_and_save(tourney, tmp_path):
+    md = render_leaderboard(tourney)
+    assert "# Tournament leaderboard" in md
+    assert "Head-to-head win rate" in md
+    for e in tourney["leaderboard"]:
+        assert f"| {e['rank']} | {e['policy']} |" in md
+    jp, mp = save_tournament(tourney, str(tmp_path / "t.json"))
+    assert json.load(open(jp))["schema"] == TOURNAMENT_SCHEMA
+    assert mp.endswith("leaderboard.md") and open(mp).read() == md
+
+
+# ---------------------------------------------------------- partial failure
+class BoomPolicy:
+    """Deliberately-crashing entrant for the partial-failure contract."""
+    requires_obs = False
+
+    def select(self, ctx):
+        raise RuntimeError("boom")
+
+
+def test_crashing_policy_marks_cells_failed_not_dropped(mini):
+    """Regression: a crashing policy must surface under failures with
+    its lost cells while every other policy's rows are kept."""
+    cfg, res = mini
+    pols = dict(zoo_policies(res))
+    pols["Boom"] = BoomPolicy
+    t = run_tournament(pols, res, cfg, TournamentConfig(
+        scenarios=SCENARIOS, seeds=(1,), vector=4))
+    fails = t["summary"]["failures"]
+    assert [f["policy"] for f in fails] == ["Boom"]
+    assert "RuntimeError: boom" in fails[0]["error"]
+    assert t["summary"]["n_failed_cells"] == len(SCENARIOS)
+    assert t["summary"]["n_cells"] == 7 * len(SCENARIOS)   # others intact
+    assert "Boom" not in {e["policy"] for e in t["leaderboard"]}
+    assert "FAILED policies" in render_leaderboard(t)
+    # ... and the bench entry points turn that into a non-zero exit
+    sys.path.insert(0, str(REPO))
+    try:
+        from benchmarks import run as bench_run
+        from benchmarks.bench_scheduling import _grid_exit
+    finally:
+        sys.path.pop(0)
+    assert _grid_exit(t["summary"]) == 1
+    assert _grid_exit({"failures": []}) == 0
+    with pytest.raises(RuntimeError, match="Boom"):
+        bench_run._raise_on_grid_failures(t["summary"])
+
+
+# ----------------------------------------------- check_bench gate overrides
+def test_check_bench_per_section_gate_overrides():
+    base = {"per_policy": {"FCFS": {"avg_wait": 100.0, "util_node": 0.8},
+                           "MRSch": {"avg_wait": 50.0}},
+            "__gates__": {"FCFS": {"avg_wait": 0.1, "*": 0.05},
+                          "MRSch": {"*": 0.5}}}
+    res = {"per_policy": {"FCFS": {"avg_wait": 115.0, "util_node": 0.74},
+                          "MRSch": {"avg_wait": 70.0}}}
+    errs = check_bench.compare(res, base, rtol=0.25,
+                               gates=base["__gates__"])
+    # FCFS.avg_wait gated at 0.1 (fails), util_node at "*"=0.05 (fails),
+    # MRSch.avg_wait at 0.5 (passes despite +40%)
+    assert sorted(e.split(":")[0] for e in errs) == [
+        "$.per_policy.FCFS.avg_wait", "$.per_policy.FCFS.util_node"]
+    assert "rtol=0.1" in [e for e in errs if "avg_wait" in e][0]
+    # without gates the global rtol applies and MRSch fails too
+    errs = check_bench.compare(res, {k: v for k, v in base.items()
+                                     if k != "__gates__"}, rtol=0.25)
+    assert any("MRSch" in e for e in errs)
+
+
+def test_check_bench_collects_all_violations_not_fail_fast():
+    base = {"a": {"avg_wait": 1.0}, "b": {"avg_wait": 1.0},
+            "vals": [1.0, 2.0, 3.0]}
+    res = {"a": {"avg_wait": 9.0}, "b": {"avg_wait": 9.0},
+           "vals": [9.0, 2.0]}
+    errs = check_bench.compare(res, base, rtol=0.1)
+    # both dict regressions + the truncation + the element regression
+    assert len(errs) == 4
+    assert any("3 entries" in e and "only 2" in e for e in errs)
+    assert any("$.vals[0]" in e for e in errs)
+
+
+def test_check_bench_summary_md_flag(tmp_path):
+    base = {"schema": "v1", "per_policy": {"FCFS": {"avg_wait": 10.0}}}
+    bp = tmp_path / "b.json"
+    bp.write_text(json.dumps(base))
+    rp = tmp_path / "r.json"
+    rp.write_text(json.dumps({"schema": "v1",
+                              "per_policy": {"FCFS": {"avg_wait": 99.0}}}))
+    md = tmp_path / "gate.md"
+    assert check_bench.main([str(rp), str(bp),
+                             "--summary-md", str(md)]) == 1
+    text = md.read_text()
+    assert "| `$.per_policy.FCFS` | ❌ FAIL |" in text
+    assert "| `$.schema` | ✅ pass |" in text and "**FAIL**" in text
+    # passing run writes a PASS table
+    assert check_bench.main([str(bp), str(bp),
+                             "--summary-md", str(md)]) == 0
+    assert "**PASS**" in md.read_text()
+
+
+def test_committed_tournament_baseline_is_self_consistent():
+    path = REPO / "benchmarks" / "baselines" / "tournament.json"
+    base = json.load(open(path))
+    assert base["schema"] == TOURNAMENT_SCHEMA
+    assert "__gates__" in base and "per_policy" in base
+    assert set(base["__gates__"]) <= set(base["per_policy"])
+    assert not check_bench.compare(base, base, rtol=0.0,
+                                   gates=base["__gates__"])

@@ -2,12 +2,15 @@
 """Gate a bench-result JSON against a committed baseline (CI bench-gate).
 
     python tools/check_bench.py RESULT.json BASELINE.json [--rtol 0.25]
+        [--summary-md OUT.md]
 
 The BASELINE is the contract: every leaf it contains must exist in the
 RESULT and match within tolerance — extra keys in the result are free
 (benches may grow fields without breaking the gate), but curate the
 baseline to stable fields only (drop wall-clock noise you don't want to
 gate, keep deterministic metric rows and generous-tolerance throughput).
+ALL violations are collected and reported, never just the first one —
+a regressing run prints its complete damage list in one pass.
 
 Numeric comparison is direction-aware by key name:
 
@@ -21,6 +24,23 @@ Numeric comparison is direction-aware by key name:
   fails;
 * anything else: two-sided relative error > rtol fails.
 
+Per-section tolerance overrides: a baseline may carry a top-level
+``__gates__`` object (stripped from the contract) mapping a *section
+name* — any dict key on the path, e.g. a policy name under the
+tournament's ``per_policy`` section — to per-key rtol overrides::
+
+    "__gates__": {"FCFS": {"avg_wait": 0.2, "*": 0.3},
+                  "MRSch": {"*": 0.6}}
+
+While descending into a dict key that names a gate section, its
+overrides become active for every leaf below it: the leaf's own key
+wins, then the section's ``"*"`` default, then the global ``--rtol``.
+Nested sections override outer ones.
+
+``--summary-md`` writes a markdown pass/fail table over the baseline's
+top-level sections (per-policy sections are broken out one level
+deeper) — CI appends it to ``$GITHUB_STEP_SUMMARY``.
+
 Non-numeric leaves (schema strings, ``equivalent`` flags) must match
 exactly.  Exit 1 with one line per violation; exit 2 on unreadable
 input.
@@ -30,12 +50,14 @@ from __future__ import annotations
 import argparse
 import json
 import sys
-from typing import Any, Dict, List
+from typing import Any, Dict, List, Mapping, Optional
 
 HIGHER_IS_BETTER = ("speedup", "per_sec", "throughput", "util_", "_frac")
 LOWER_IS_BETTER = ("_us", "_ms", "seconds", "latency", "wait",
                    "slowdown", "loss", "makespan", "requeues",
                    "n_failed", "failed_")
+
+GATES_KEY = "__gates__"
 
 
 def _direction(key: str) -> str:
@@ -52,57 +74,128 @@ def _is_number(x: Any) -> bool:
 
 
 def compare(result: Any, baseline: Any, rtol: float, atol: float = 1e-9,
-            path: str = "$") -> List[str]:
-    """Violations of ``result`` against the ``baseline`` contract."""
+            path: str = "$", gates: Optional[Mapping[str, Mapping[str, float]]] = None,
+            section: Optional[Mapping[str, float]] = None) -> List[str]:
+    """ALL violations of ``result`` against the ``baseline`` contract.
+
+    ``gates`` maps section names (dict keys on the path) to per-key rtol
+    overrides active below that key; ``section`` is the innermost active
+    override map (see module docstring).
+    """
     errors: List[str] = []
     if isinstance(baseline, dict):
         if not isinstance(result, dict):
             return [f"{path}: expected object, got {type(result).__name__}"]
         for key, bval in baseline.items():
+            if key == GATES_KEY:
+                continue
             if key not in result:
                 errors.append(f"{path}.{key}: missing from result")
                 continue
+            sub = gates.get(key, section) if gates else section
             errors.extend(compare(result[key], bval, rtol, atol,
-                                  f"{path}.{key}"))
+                                  f"{path}.{key}", gates, sub))
         return errors
     if isinstance(baseline, list):
         if not isinstance(result, list):
             return [f"{path}: expected array, got {type(result).__name__}"]
         if len(result) < len(baseline):
-            return [f"{path}: baseline has {len(baseline)} entries, "
-                    f"result only {len(result)}"]
-        for i, bval in enumerate(baseline):
-            errors.extend(compare(result[i], bval, rtol, atol, f"{path}[{i}]"))
+            # Not fail-fast: the truncation is one violation, and the
+            # entries both sides DO have are still compared below.
+            errors.append(f"{path}: baseline has {len(baseline)} entries, "
+                          f"result only {len(result)}")
+        for i, bval in enumerate(baseline[:len(result)]):
+            errors.extend(compare(result[i], bval, rtol, atol, f"{path}[{i}]",
+                                  gates, section))
         return errors
     key = path.rsplit(".", 1)[-1].split("[")[0]
     if _is_number(baseline):
         if not _is_number(result):
             return [f"{path}: expected number, got {result!r}"]
+        if section:
+            rtol = section.get(key, section.get("*", rtol))
         lo = baseline - (abs(baseline) * rtol + atol)
         hi = baseline + (abs(baseline) * rtol + atol)
         direction = _direction(key)
         if direction == "higher" and result < lo:
             return [f"{path}: regressed {baseline} -> {result} "
-                    f"(below {lo:.6g}, higher is better)"]
+                    f"(below {lo:.6g}, higher is better, rtol={rtol})"]
         if direction == "lower" and result > hi:
             return [f"{path}: regressed {baseline} -> {result} "
-                    f"(above {hi:.6g}, lower is better)"]
+                    f"(above {hi:.6g}, lower is better, rtol={rtol})"]
         if direction == "both" and not lo <= result <= hi:
             return [f"{path}: drifted {baseline} -> {result} "
-                    f"(outside [{lo:.6g}, {hi:.6g}])"]
+                    f"(outside [{lo:.6g}, {hi:.6g}], rtol={rtol})"]
         return []
     if result != baseline:
         return [f"{path}: expected {baseline!r}, got {result!r}"]
     return []
 
 
+def _sections(baseline: Any) -> List[str]:
+    """Summary-table row paths: every top-level key, with dict-of-dict
+    sections (``per_policy``-style) broken out one level deeper."""
+    if not isinstance(baseline, dict):
+        return ["$"]
+    out: List[str] = []
+    for key, val in baseline.items():
+        if key == GATES_KEY:
+            continue
+        if (isinstance(val, dict) and val
+                and all(isinstance(v, dict) for v in val.values())):
+            out.extend(f"$.{key}.{k}" for k in val)
+        else:
+            out.append(f"$.{key}")
+    return out
+
+
+def summary_md(baseline: Any, errors: List[str], result_path: str,
+               baseline_path: str, rtol: float) -> str:
+    """Markdown pass/fail table CI appends to the step summary."""
+    lines = [
+        f"### bench-gate: `{result_path}` vs `{baseline_path}` "
+        f"(rtol={rtol})",
+        "",
+        "| section | status | violations |",
+        "|---|---|---|",
+    ]
+    claimed = set()
+    for sec in _sections(baseline):
+        hits = [e for e in errors
+                if e.startswith(sec + ".") or e.startswith(sec + "[")
+                or e.startswith(sec + ":")]
+        claimed.update(hits)
+        status = "❌ FAIL" if hits else "✅ pass"
+        detail = "<br>".join(h.replace("|", "\\|") for h in hits[:4])
+        if len(hits) > 4:
+            detail += f"<br>… {len(hits) - 4} more"
+        lines.append(f"| `{sec}` | {status} | {detail or '—'} |")
+    orphans = [e for e in errors if e not in claimed]
+    if orphans:
+        lines.append("| *(other)* | ❌ FAIL | "
+                     + "<br>".join(o.replace("|", "\\|")
+                                   for o in orphans[:4]) + " |")
+    lines += ["",
+              ("**FAIL** — " + str(len(errors)) + " violation(s)") if errors
+              else "**PASS** — all sections within tolerance",
+              ""]
+    return "\n".join(lines)
+
+
 def check(result_path: str, baseline_path: str, rtol: float,
-          atol: float = 1e-9) -> List[str]:
+          atol: float = 1e-9):
+    """Load both files -> (violations, baseline).  The baseline's
+    ``__gates__`` section, when present, supplies per-section rtol
+    overrides and is excluded from the contract itself."""
     with open(result_path) as f:
         result = json.load(f)
     with open(baseline_path) as f:
         baseline = json.load(f)
-    return compare(result, baseline, rtol=rtol, atol=atol)
+    gates: Optional[Dict] = None
+    if isinstance(baseline, dict):
+        gates = baseline.get(GATES_KEY)
+    return compare(result, baseline, rtol=rtol, atol=atol,
+                   gates=gates), baseline
 
 
 def main(argv=None) -> int:
@@ -114,13 +207,20 @@ def main(argv=None) -> int:
                     help="relative tolerance (default 0.25)")
     ap.add_argument("--atol", type=float, default=1e-9,
                     help="absolute slack added to every bound")
+    ap.add_argument("--summary-md", default=None, metavar="OUT.md",
+                    help="write a markdown pass/fail section table "
+                         "(for $GITHUB_STEP_SUMMARY)")
     args = ap.parse_args(argv)
     try:
-        errors = check(args.result, args.baseline, rtol=args.rtol,
-                       atol=args.atol)
+        errors, baseline = check(args.result, args.baseline, rtol=args.rtol,
+                                 atol=args.atol)
     except (OSError, json.JSONDecodeError) as e:
         print(f"check_bench: cannot load inputs: {e}", file=sys.stderr)
         return 2
+    if args.summary_md:
+        with open(args.summary_md, "w") as f:
+            f.write(summary_md(baseline, errors, args.result, args.baseline,
+                               args.rtol))
     for e in errors:
         print(f"REGRESSION {e}")
     if errors:
