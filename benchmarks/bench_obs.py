@@ -1,0 +1,123 @@
+"""Telemetry overhead + event-stream bench (the observability gate).
+
+Three sections, gated by ``tools/check_bench.py`` against
+``benchmarks/baselines/obs_overhead.json``:
+
+* ``events`` — deterministic ``mrsch.trace/v1`` event counts for a fixed
+  registry scenario/seed under the sequential engine, plus the
+  sequential-vs-vector byte-parity bit.  Exact-gated (``__gates__`` pins
+  rtol 0): any change to what the engines emit is a schema change and
+  must come with a baseline update.
+* ``overhead`` — the cost of *disabled* instrumentation.
+  ``obs_off_overhead`` is the fraction of the traced run's wall time
+  spent in NULL-tracer emit calls (per-call cost of the no-op methods x
+  events emitted / untraced runtime); the ISSUE bar is <= 2 % and CI
+  fails above it (``off_within_budget`` + the direction-aware
+  ``*overhead*`` gate).  ``obs_on_overhead`` (BufferTracer recording
+  everything) is reported and loosely gated — recording is allowed to
+  cost something; disabled instrumentation is not.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import FCFSPolicy
+from repro.obs.trace import NULL, BufferTracer, trace_lines
+from repro.sim.simulator import SimConfig, Simulator
+from repro.sim.vector import VectorSimulator
+from repro.workloads import build_jobs
+
+from .common import mini_setup, save_json
+
+#: obs-off instrumentation budget: NULL-tracer emits may cost at most
+#: this fraction of the engine's untraced runtime (ISSUE: <= 2 %).
+OFF_BUDGET = 0.02
+
+
+def _drive(res, jobs, sim_cfg, tracer) -> Simulator:
+    sim = Simulator(res, list(jobs), FCFSPolicy(), sim_cfg, tracer=tracer)
+    while (ctx := sim.next_decision()) is not None:
+        sim.post_action(int(sim.policy.select(ctx)))
+    return sim
+
+
+def _null_emit_cost(calls: int = 200_000, reps: int = 3) -> float:
+    """Per-call seconds of a NULL-tracer emit (min over reps)."""
+    best = float("inf")
+    emit = NULL.decision
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        for _ in range(calls):
+            emit(0, 0.0, 0, 0, 0, 1)
+        best = min(best, time.perf_counter() - t0)
+    return best / calls
+
+
+def run(quick: bool = True, scenario: str = "S2", seed: int = 1):
+    days, jobs_day = (0.5, 120) if quick else (2.0, 220)
+    cfg, res = mini_setup(seed=0, duration_days=days, jobs_per_day=jobs_day)
+    jobs = build_jobs(scenario, cfg, seed=seed)
+    sim_cfg = SimConfig(window=10, backfill=True)
+    reps = 3 if quick else 5
+
+    # Traced reference run: the canonical event stream + counts.
+    ref = BufferTracer()
+    _drive(res, jobs, sim_cfg, ref)
+    counts: dict = {}
+    for e in ref.events:
+        counts[e["ev"]] = counts.get(e["ev"], 0) + 1
+    n_events = len(ref.events)
+
+    # Sequential vs vector byte parity on the same two-env scenario.
+    seq_tr = BufferTracer()
+    for env in (0, 1):
+        sim = Simulator(res, list(jobs), FCFSPolicy(), sim_cfg,
+                        tracer=seq_tr, env=env)
+        while (ctx := sim.next_decision()) is not None:
+            sim.post_action(int(sim.policy.select(ctx)))
+    vec_tr = BufferTracer()
+    VectorSimulator.from_jobsets(res, [list(jobs), list(jobs)], FCFSPolicy(),
+                                 sim_cfg, tracer=vec_tr).run()
+    parity = trace_lines(seq_tr.events) == trace_lines(vec_tr.events)
+
+    # Wall time with instrumentation disabled (NULL) vs recording.
+    off_s = min(_time_run(res, jobs, sim_cfg, NULL) for _ in range(reps))
+    on_s = min(_time_run(res, jobs, sim_cfg, BufferTracer())
+               for _ in range(reps))
+    null_emit_s = _null_emit_cost()
+    off_overhead = null_emit_s * n_events / off_s
+    on_overhead = max(0.0, (on_s - off_s) / off_s)
+
+    out = {
+        "schema": "mrsch.bench.obs/v1",
+        "scenario": scenario,
+        "seed": seed,
+        "events": {
+            "n_events": n_events,
+            "parity_seq_vec": bool(parity),
+            "counts": counts,
+        },
+        "overhead": {
+            "n_events": n_events,
+            "null_emit_ns": round(null_emit_s * 1e9, 2),
+            "off_runtime_s": round(off_s, 4),
+            "on_runtime_s": round(on_s, 4),
+            "obs_off_overhead": round(off_overhead, 5),
+            "obs_on_overhead": round(on_overhead, 5),
+            "budget": OFF_BUDGET,
+            "off_within_budget": bool(off_overhead <= OFF_BUDGET),
+        },
+    }
+    out["path"] = save_json("obs_overhead", out)
+    return out
+
+
+def _time_run(res, jobs, sim_cfg, tracer) -> float:
+    t0 = time.perf_counter()
+    _drive(res, jobs, sim_cfg, tracer)
+    return time.perf_counter() - t0
+
+
+if __name__ == "__main__":
+    import json
+    print(json.dumps(run(), indent=1))

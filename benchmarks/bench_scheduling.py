@@ -38,6 +38,7 @@ from repro.core import (AgentConfig, FCFSPolicy, GAConfig, GAOptimizer,
 from repro.eval import (MatrixConfig, TournamentConfig, default_policies,
                         eval_factory, run_matrix, run_tournament, save_matrix,
                         save_tournament, zoo_policies)
+from repro.obs.trace import BufferTracer, write_trace
 from repro.workloads import (build_curriculum, build_jobs, build_scenarios,
                              build_sweep, get_scenario, run_phases, run_sweep,
                              segment_jobs)
@@ -140,10 +141,15 @@ def run_matrix_bench(smoke: bool = True, vector: int = 4, seed: int = 0,
         else (SMOKE_MATRIX if smoke else FULL_MATRIX),
         seeds=tuple(seeds) if seeds else ((1,) if smoke else (1, 2)),
         vector=vector)
-    matrix = run_matrix(policies, res, cfg, mcfg)
+    tracer = BufferTracer()
+    matrix = run_matrix(policies, res, cfg, mcfg, tracer=tracer)
     json_path, csv_path = save_matrix(
         matrix, os.path.join(RESULTS, "matrix.json"))
-    matrix["paths"] = {"json": json_path, "csv": csv_path}
+    trace_path = str(write_trace(tracer.events,
+                                 os.path.join(RESULTS, "matrix_trace.jsonl"),
+                                 meta=tracer.meta))
+    matrix["paths"] = {"json": json_path, "csv": csv_path,
+                       "trace": trace_path}
     return matrix
 
 
@@ -177,10 +183,14 @@ def run_tournament_bench(smoke: bool = True, vector: int = 4, seed: int = 0,
         else (TOURNAMENT_SMOKE if smoke else TOURNAMENT_FULL),
         seeds=tuple(seeds) if seeds else ((1,) if smoke else (1, 2)),
         vector=vector)
-    t = run_tournament(policies, res, cfg, tcfg)
+    tracer = BufferTracer()
+    t = run_tournament(policies, res, cfg, tcfg, tracer=tracer)
     json_path, md_path = save_tournament(
         t, os.path.join(RESULTS, "tournament.json"))
-    t["paths"] = {"json": json_path, "md": md_path}
+    trace_path = str(write_trace(
+        tracer.events, os.path.join(RESULTS, "tournament_trace.jsonl"),
+        meta=tracer.meta))
+    t["paths"] = {"json": json_path, "md": md_path, "trace": trace_path}
     return t
 
 

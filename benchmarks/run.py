@@ -3,6 +3,13 @@
 Prints ``name,us_per_call,derived`` CSV rows.  ``--full`` scales up the
 trace sizes; default sizing finishes on a single CPU core.
 
+Besides the stdout CSV, every run writes
+``results/bench/run_summary.json``: one entry per executed cell with its
+wall time and the process peak RSS observed when the cell finished
+(``ru_maxrss`` — a high-water mark, so per-cell values are monotone
+within a run; the delta between consecutive cells bounds a cell's own
+footprint).
+
 Exit code contract (the CI lanes depend on it): any selected bench that
 raises — including a failure while deriving its summary cell — produces
 an ``ERROR:`` row and a non-zero exit; ``--only`` with a name that
@@ -14,6 +21,19 @@ import argparse
 import sys
 import time
 import traceback
+
+
+def _peak_rss_mb() -> float:
+    """Process high-water-mark RSS in MiB (0.0 where unsupported)."""
+    try:
+        import resource
+        kb = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+    except Exception:       # pragma: no cover - non-POSIX
+        return 0.0
+    # Linux reports KiB; macOS reports bytes.
+    if sys.platform == "darwin":    # pragma: no cover
+        kb /= 1024.0
+    return round(kb / 1024.0, 2)
 
 
 def _raise_on_grid_failures(summary) -> None:
@@ -41,6 +61,12 @@ def _derived(name, out) -> str:
     if name == "overhead_vF":
         return (f"decision={out['decision_latency_s'] * 1e3:.1f}ms;"
                 f"bar2s={'PASS' if out['meets_paper_bar'] else 'FAIL'}")
+    if name == "obs_overhead":
+        o = out["overhead"]
+        return (f"off={o['obs_off_overhead']:.2%};on="
+                f"{o['obs_on_overhead']:.2%};budget="
+                f"{'PASS' if o['off_within_budget'] else 'FAIL'};parity="
+                f"{'PASS' if out['events']['parity_seq_vec'] else 'FAIL'}")
     if name == "roofline_g":
         s = out["summary"]
         return (f"cells_ok={s['baseline_cells_ok']};"
@@ -114,10 +140,13 @@ def run_benches(benches) -> int:
 
     A failure is a bench body raising OR its derived-summary cell
     raising (a bench whose output lost a contract key is as broken as
-    one that crashed) — both print an ``ERROR:`` row and count.
+    one that crashed) — both print an ``ERROR:`` row and count.  Each
+    cell's wall time and peak RSS land in
+    ``results/bench/run_summary.json``.
     """
     print("name,us_per_call,derived")
     failures = 0
+    cells = {}
     for name, fn in benches.items():
         bname, dt, out, err = _run(name, fn)
         if err is None:
@@ -126,14 +155,35 @@ def run_benches(benches) -> int:
             except Exception as e:
                 traceback.print_exc()
                 err = f"derived: {type(e).__name__}: {e}"
+        cells[bname] = {"wall_s": round(dt, 3),
+                        "peak_rss_mb": _peak_rss_mb(),
+                        "ok": err is None}
         if err:
             failures += 1
+            cells[bname]["error"] = err
             print(f"{bname},{dt * 1e6:.0f},ERROR:{err}", flush=True)
             continue
         print(f"{bname},{dt * 1e6:.0f},{derived}", flush=True)
+    _save_summary(cells, failures)
     if failures:
         print(f"{failures}/{len(benches)} benches failed", file=sys.stderr)
     return failures
+
+
+def _save_summary(cells, failures) -> None:
+    try:
+        from .common import save_json
+        path = save_json("run_summary", {
+            "schema": "mrsch.bench.run/v1",
+            "cells": cells,
+            "total_wall_s": round(sum(c["wall_s"] for c in cells.values()),
+                                  3),
+            "peak_rss_mb": _peak_rss_mb(),
+            "failures": failures,
+        })
+        print(f"run summary -> {path}", file=sys.stderr)
+    except Exception:       # a broken summary must not fail the benches
+        traceback.print_exc()
 
 
 def main(argv=None) -> int:
@@ -150,12 +200,14 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
     quick = not args.full
 
-    from . import (bench_curriculum, bench_goal_adaptation, bench_overhead,
-                   bench_queue_encoder, bench_roofline, bench_scheduling,
-                   bench_serving, bench_state_module, bench_three_resource)
+    from . import (bench_curriculum, bench_goal_adaptation, bench_obs,
+                   bench_overhead, bench_queue_encoder, bench_roofline,
+                   bench_scheduling, bench_serving, bench_state_module,
+                   bench_three_resource)
 
     benches = {
         "overhead_vF": lambda: bench_overhead.run(quick=quick),
+        "obs_overhead": lambda: bench_obs.run(quick=quick),
         "roofline_g": lambda: bench_roofline.run(quick=quick),
         "state_module_fig3": lambda: bench_state_module.run(
             quick=quick, backend=args.backend),

@@ -77,13 +77,15 @@ def _train_steps_scan(cfg: DFPConfig, params, opt_state, batches, lr,
     def body(carry, batch):
         params, opt_state = carry
         loss, grads = jax.value_and_grad(loss_fn)(params, cfg, batch)
+        gnorm = jnp.sqrt(sum(jnp.vdot(g, g)
+                             for g in jax.tree_util.tree_leaves(grads)))
         params, opt_state = adam_update(grads, opt_state, params, lr=lr,
                                         grad_clip=grad_clip)
-        return (params, opt_state), loss
+        return (params, opt_state), (loss, gnorm)
 
-    (params, opt_state), losses = jax.lax.scan(body, (params, opt_state),
-                                               batches)
-    return params, opt_state, losses
+    (params, opt_state), (losses, gnorms) = jax.lax.scan(
+        body, (params, opt_state), batches)
+    return params, opt_state, losses, gnorms
 
 
 @functools.partial(jax.jit, static_argnums=(1,))
@@ -136,6 +138,9 @@ class MRSchAgent:
         self.training = False
         self.losses: List[float] = []
         self.goal_log: List[np.ndarray] = []
+        # Pre-clip global gradient norm of the latest training burst,
+        # surfaced into the telemetry registry by the vectorized trainer.
+        self.last_grad_norm: Optional[float] = None
 
     def set_backend(self, backend: str) -> None:
         """Switch the NN execution backend ("xla" | "pallas") in place.
@@ -310,9 +315,10 @@ class MRSchAgent:
         samples = [self.replay.sample(self.rng, self.config.batch_size)
                    for _ in range(steps)]
         batches = {k: np.stack([s[k] for s in samples]) for k in samples[0]}
-        self.params, self.opt_state, losses = _train_steps_scan(
+        self.params, self.opt_state, losses, gnorms = _train_steps_scan(
             self.dfp, self.params, self.opt_state, batches,
             self.config.lr, self.config.grad_clip)
+        self.last_grad_norm = float(np.asarray(gnorms).mean())
         return float(np.asarray(losses).mean())
 
     # ---------------------------------------------------------------- io

@@ -28,6 +28,8 @@ import time
 from dataclasses import dataclass, field, replace
 from typing import Dict, List, Optional, Sequence, Tuple
 
+from ..obs.metrics import MetricsRegistry
+from ..obs.profiling import annotate
 from ..sim.cluster import ResourceSpec
 from ..sim.job import Job
 from ..sim.simulator import SimConfig, SimResult, Simulator, run_trace
@@ -91,7 +93,8 @@ class TrainLog:
 def train_agent(agent: MRSchAgent, resources: Sequence[ResourceSpec],
                 jobsets: Sequence[Sequence], epochs: int = 1,
                 verbose: bool = False,
-                config: Optional[TrainConfig] = None) -> TrainLog:
+                config: Optional[TrainConfig] = None,
+                registry: Optional[MetricsRegistry] = None) -> TrainLog:
     """Run the agent through ordered jobsets with exploration + learning.
 
     Without ``config`` this is the sequential reference loop.  With a
@@ -107,7 +110,7 @@ def train_agent(agent: MRSchAgent, resources: Sequence[ResourceSpec],
             cfg = replace(cfg, epochs=epochs)
         if verbose and not cfg.verbose:
             cfg = replace(cfg, verbose=True)
-        return train_agent_vectorized(agent, slots, cfg)
+        return train_agent_vectorized(agent, slots, cfg, registry=registry)
     log = TrainLog()
     t0 = time.time()
     agent.training = True
@@ -164,7 +167,9 @@ def _check_lane_resources(agent: MRSchAgent,
 
 
 def train_agent_vectorized(agent: MRSchAgent, slots: Sequence[EnvSlot],
-                           config: TrainConfig = TrainConfig()) -> TrainLog:
+                           config: TrainConfig = TrainConfig(),
+                           registry: Optional[MetricsRegistry] = None
+                           ) -> TrainLog:
     """Batched curriculum training over heterogeneous environment lanes.
 
     Every lockstep round collects one decision from each live lane with a
@@ -172,6 +177,10 @@ def train_agent_vectorized(agent: MRSchAgent, slots: Sequence[EnvSlot],
     flushes its episode to replay, runs the jitted train step
     (``agent.end_episode``), and is refilled with its next jobset so the
     batch stays wide.  Reports per-episode metrics plus decisions/sec.
+
+    ``registry`` (a ``repro.obs.MetricsRegistry``) receives live training
+    telemetry: loss / grad-norm / epsilon / decisions-per-sec gauges and
+    per-lane episode and decision counters.
     """
     log = TrainLog()
     if config.backend is not None:
@@ -215,7 +224,8 @@ def train_agent_vectorized(agent: MRSchAgent, slots: Sequence[EnvSlot],
     vec = VectorSimulator(sims, policy=agent)
 
     def refill(i: int, result: SimResult) -> Optional[Simulator]:
-        loss = agent.end_episode(slot=i)
+        with annotate("mrsch.train.episode_flush"):
+            loss = agent.end_episode(slot=i)
         if loss is not None:
             log.episode_losses.append(loss)
         row = result.metrics.as_row()
@@ -225,6 +235,21 @@ def train_agent_vectorized(agent: MRSchAgent, slots: Sequence[EnvSlot],
                              "epsilon": agent.epsilon,
                              "decisions": result.decisions, **row})
         log.decisions += result.decisions
+        if registry is not None:
+            lane = {"lane": lanes[i].tag or f"env{i}"}
+            registry.counter("train_episodes_total", lane).inc()
+            registry.counter("train_decisions_total",
+                             lane).inc(result.decisions)
+            if loss is not None:
+                registry.gauge("train_loss").set(loss)
+                registry.histogram("train_episode_loss").observe(loss)
+                if agent.last_grad_norm is not None:
+                    registry.gauge("train_grad_norm").set(
+                        agent.last_grad_norm)
+            registry.gauge("train_epsilon").set(agent.epsilon)
+            elapsed = time.perf_counter() - t0
+            registry.gauge("train_decisions_per_sec").set(
+                log.decisions / max(elapsed, 1e-9))
         if config.verbose:
             print(f"[train-vec] env {i} ({lanes[i].tag}) {active[i]}: "
                   f"loss={loss} eps={agent.epsilon:.3f} "
@@ -234,7 +259,8 @@ def train_agent_vectorized(agent: MRSchAgent, slots: Sequence[EnvSlot],
     on_round = None
     if config.grad_steps_per_round > 0:
         def on_round(round_idx: int, n_live: int) -> None:
-            loss = agent.train_steps(config.grad_steps_per_round)
+            with annotate("mrsch.train.grad_steps"):
+                loss = agent.train_steps(config.grad_steps_per_round)
             if loss is not None:
                 log.round_losses.append(loss)
 

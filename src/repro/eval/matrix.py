@@ -33,6 +33,8 @@ import numpy as np
 from ..core.policies import (FCFSPolicy, GAConfig, GAOptimizer,
                              ScalarRLConfig, ScalarRLPolicy)
 from ..core.policy_api import supports_batch
+from ..obs.profiling import span
+from ..obs.trace import NULL, Tracer
 from ..sim.cluster import ResourceSpec
 from ..sim.simulator import SimConfig, SimResult
 from ..sim.vector import VectorSimulator
@@ -129,12 +131,21 @@ def eval_factory(factory: PolicyFactory) -> PolicyFactory:
 
 def run_matrix(policies: Mapping[str, PolicyFactory],
                resources: Sequence[ResourceSpec], theta: ThetaConfig,
-               cfg: MatrixConfig) -> Dict:
+               cfg: MatrixConfig, tracer: Tracer = NULL) -> Dict:
     """Evaluate every policy over every (scenario, seed) cell.
 
     Traces are built once per cell and shared across policies, so every
     policy sees the identical workload.  Policies exposing ``training``
     are forced into evaluation mode for the run (restored afterwards).
+
+    ``tracer`` receives the full ``mrsch.trace/v1`` event stream of every
+    cell.  Environment ids are globally unique across the grid —
+    ``env = policy_index * n_cells + cell_index`` — and the tracer's
+    ``meta["envs"]`` (when it records meta, e.g. ``BufferTracer``) maps
+    each id back to its (policy, scenario, seed).  Each policy's grid
+    sweep is additionally wrapped in a ``prof.span`` named
+    ``policy:<name>`` so per-policy decision latency can be read straight
+    from the trace (``tools/trace_report.py``).
 
     Partial-failure contract: one policy crashing must not silently
     shrink the grid.  Its remaining cells are recorded under
@@ -150,10 +161,17 @@ def run_matrix(policies: Mapping[str, PolicyFactory],
               for cell in cells}
     sim_cfg = SimConfig.for_engine("vector", window=cfg.window,
                                    backfill=cfg.backfill)
+    meta = getattr(tracer, "meta", None)
+    if meta is not None:
+        envs = meta.setdefault("envs", {})
+        for p, name in enumerate(policies):
+            for c, (scenario, seed) in enumerate(cells):
+                envs[str(p * len(cells) + c)] = {
+                    "policy": name, "scenario": scenario, "seed": seed}
     rows: List[Dict] = []
     failures: List[Dict] = []
     batched_policies = 0
-    for name, factory in policies.items():
+    for p_idx, (name, factory) in enumerate(policies.items()):
         try:
             probe = factory()
         except Exception as e:
@@ -177,17 +195,24 @@ def run_matrix(policies: Mapping[str, PolicyFactory],
                 # Scenario fault plans ride alongside the trace: the engine
                 # consumes them directly (they are not job attributes).
                 flist = [get_scenario(s).faults for s, _ in chunk]
+                eids = [p_idx * len(cells) + i + j
+                        for j in range(len(chunk))]
                 try:
                     if batched:
                         vec = VectorSimulator.from_jobsets(resources, jobsets,
                                                            probe, sim_cfg,
-                                                           faults=flist)
+                                                           faults=flist,
+                                                           tracer=tracer,
+                                                           env_ids=eids)
                     else:
                         vec = VectorSimulator.from_factory(resources, jobsets,
                                                            eval_factory(factory),
                                                            sim_cfg,
-                                                           faults=flist)
-                    chunk_results = vec.run()
+                                                           faults=flist,
+                                                           tracer=tracer,
+                                                           env_ids=eids)
+                    with span(tracer, f"policy:{name}"):
+                        chunk_results = vec.run()
                 except Exception as e:
                     # All cells this policy has not completed are failed —
                     # a crash mid-grid must not read as a smaller grid.

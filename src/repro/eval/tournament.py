@@ -31,6 +31,7 @@ from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 from ..baselines import (CoSchedConfig, CoSchedPolicy, CPConfig, CPDispatcher,
                          DRASConfig, DRASPolicy, PRBConfig, PRBPolicy)
+from ..obs.trace import NULL, Tracer
 from ..sim.cluster import ResourceSpec
 from ..workloads.theta import ThetaConfig
 from .matrix import (MatrixConfig, PolicyFactory, default_policies,
@@ -135,10 +136,13 @@ def _head_to_head(cell_scores: Mapping, policies: Sequence[str]
 
 def run_tournament(policies: Mapping[str, PolicyFactory],
                    resources: Sequence[ResourceSpec], theta: ThetaConfig,
-                   cfg: TournamentConfig) -> Dict:
+                   cfg: TournamentConfig, tracer: Tracer = NULL) -> Dict:
     """Round-robin every policy over every (scenario, seed) cell and
-    derive the standings (see module docstring for the sections)."""
-    matrix = run_matrix(policies, resources, theta, cfg.matrix_config())
+    derive the standings (see module docstring for the sections).
+    ``tracer`` is threaded through to ``run_matrix`` (one
+    ``mrsch.trace/v1`` stream covering the whole round-robin)."""
+    matrix = run_matrix(policies, resources, theta, cfg.matrix_config(),
+                        tracer=tracer)
     rows = matrix["rows"]
     util_cols = [f"util_{r.name}" for r in resources]
     metrics = list(RANK_LOWER) + util_cols

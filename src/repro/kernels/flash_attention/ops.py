@@ -11,6 +11,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from ...obs.profiling import named_scope
 from .kernel import flash_attention_kernel, mha_bwd_kernels, mha_fwd_kernel
 
 
@@ -19,6 +20,12 @@ from .kernel import flash_attention_kernel, mha_bwd_kernels, mha_fwd_kernel
 def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
                     block_k: int = 128, interpret: bool = True):
     """q (B, Sq, H, dh); k/v (B, Sk, KV, dh); returns (B, Sq, H, dh)."""
+    with named_scope("mrsch.kernel.flash_attention"):
+        return _flash_attention_impl(q, k, v, causal=causal, block_q=block_q,
+                                     block_k=block_k, interpret=interpret)
+
+
+def _flash_attention_impl(q, k, v, *, causal, block_q, block_k, interpret):
     B, Sq, H, dh = q.shape
     KV = k.shape[2]
     if KV != H:
@@ -66,11 +73,12 @@ def default_interpret() -> bool:
 
 
 def _mha_fwd_impl(q, k, v, lengths, block_q, block_k, interpret):
-    Sq = q.shape[1]
-    o, lse = mha_fwd_kernel(
-        _pad_seq(q, block_q), _pad_seq(k, block_k), _pad_seq(v, block_k),
-        lengths, block_q=block_q, block_k=block_k, interpret=interpret)
-    return o[:, :Sq], lse[:, :Sq]
+    with named_scope("mrsch.kernel.mha_fwd"):
+        Sq = q.shape[1]
+        o, lse = mha_fwd_kernel(
+            _pad_seq(q, block_q), _pad_seq(k, block_k), _pad_seq(v, block_k),
+            lengths, block_q=block_q, block_k=block_k, interpret=interpret)
+        return o[:, :Sq], lse[:, :Sq]
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6))
@@ -84,6 +92,11 @@ def _mha_fwd(q, k, v, lengths, block_q, block_k, interpret):
 
 
 def _mha_bwd(block_q, block_k, interpret, res, do):
+    with named_scope("mrsch.kernel.mha_bwd"):
+        return _mha_bwd_impl(block_q, block_k, interpret, res, do)
+
+
+def _mha_bwd_impl(block_q, block_k, interpret, res, do):
     q, k, v, lengths, o, lse = res
     Sq, Sk = q.shape[1], k.shape[1]
     # delta = rowsum(do * o): the softmax-jacobian correction, computed

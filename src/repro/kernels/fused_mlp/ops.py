@@ -20,6 +20,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from ...obs.profiling import named_scope
 from .kernel import (_activation_grad, fused_mlp_dgrad_layer, fused_mlp_layer,
                      fused_mlp_wgrad_layer)
 
@@ -69,15 +70,16 @@ def _fused_mlp_2d(x, w, b, activation, slope, block_m, block_n, block_k,
 
 def _forward_2d(x, w, b, activation, slope, block_m, block_n, block_k,
                 interpret):
-    M, K = x.shape
-    N = w.shape[1]
-    xp = _pad_to(_pad_to(x, block_m, 0), block_k, 1)
-    wp = _pad_to(_pad_to(w, block_k, 0), block_n, 1)
-    bp = _pad_to(b, block_n, 0)
-    y = fused_mlp_layer(xp, wp, bp, activation=activation, slope=slope,
-                        block_m=block_m, block_n=block_n, block_k=block_k,
-                        interpret=interpret)
-    return y[:M, :N]
+    with named_scope("mrsch.kernel.fused_mlp"):
+        M, K = x.shape
+        N = w.shape[1]
+        xp = _pad_to(_pad_to(x, block_m, 0), block_k, 1)
+        wp = _pad_to(_pad_to(w, block_k, 0), block_n, 1)
+        bp = _pad_to(b, block_n, 0)
+        y = fused_mlp_layer(xp, wp, bp, activation=activation, slope=slope,
+                            block_m=block_m, block_n=block_n,
+                            block_k=block_k, interpret=interpret)
+        return y[:M, :N]
 
 
 def _fused_mlp_fwd(x, w, b, activation, slope, block_m, block_n, block_k,
@@ -89,6 +91,13 @@ def _fused_mlp_fwd(x, w, b, activation, slope, block_m, block_n, block_k,
 
 def _fused_mlp_bwd(activation, slope, block_m, block_n, block_k, interpret,
                    res, g):
+    with named_scope("mrsch.kernel.fused_mlp_bwd"):
+        return _fused_mlp_bwd_impl(activation, slope, block_m, block_n,
+                                   block_k, interpret, res, g)
+
+
+def _fused_mlp_bwd_impl(activation, slope, block_m, block_n, block_k,
+                        interpret, res, g):
     x, w, b, y = res
     M, K = x.shape
     N = w.shape[1]

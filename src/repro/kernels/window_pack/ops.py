@@ -13,6 +13,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from ...obs.profiling import named_scope
 from .kernel import window_pack_kernel
 from .ref import pack_window_reference
 
@@ -37,16 +38,17 @@ def pack_window(waiting: jnp.ndarray, feats: jnp.ndarray, *, window: int,
     """
     if use_pallas is None:
         use_pallas = jax.default_backend() == "tpu"
-    if not use_pallas:
-        return pack_window_reference(waiting, feats, window=window)
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
-    N, J = waiting.shape
-    F = feats.shape[2]
-    wp = _pad_axis(waiting.astype(jnp.float32), 128, 1)
-    fp = _pad_axis(_pad_axis(feats.astype(jnp.float32), 128, 1), 128, 2)
-    Wp = window + ((-window) % 8)
-    wf, wi, wv = window_pack_kernel(wp, fp, window=Wp,
-                                    interpret=bool(interpret))
-    return (wf[:, :window, :F], wi[:, :window],
-            wv[:, :window] > 0.5)
+    with named_scope("mrsch.kernel.window_pack"):
+        if not use_pallas:
+            return pack_window_reference(waiting, feats, window=window)
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        N, J = waiting.shape
+        F = feats.shape[2]
+        wp = _pad_axis(waiting.astype(jnp.float32), 128, 1)
+        fp = _pad_axis(_pad_axis(feats.astype(jnp.float32), 128, 1), 128, 2)
+        Wp = window + ((-window) % 8)
+        wf, wi, wv = window_pack_kernel(wp, fp, window=Wp,
+                                        interpret=bool(interpret))
+        return (wf[:, :window, :F], wi[:, :window],
+                wv[:, :window] > 0.5)

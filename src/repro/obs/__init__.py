@@ -1,0 +1,22 @@
+"""Unified telemetry layer: structured event tracing (``mrsch.trace/v1``),
+metrics registry with Prometheus-style exposition, and profiling hooks.
+
+See docs/observability.md for the event taxonomy and how to read a
+trace.  Everything is off by default: engines take ``tracer=NULL``,
+services take ``registry=None``, and the instrumented paths stay
+allocation-free (gated by ``benchmarks/bench_obs.py``).
+"""
+from .metrics import (Counter, Gauge, Histogram, JsonlFlusher,
+                      MetricsRegistry)
+from .profiling import annotate, named_scope, span
+from .trace import (NULL, TRACE_SCHEMA, BufferTracer, NullTracer, Tracer,
+                    canonical_events, read_trace, to_chrome, trace_lines,
+                    write_trace)
+
+__all__ = [
+    "TRACE_SCHEMA", "Tracer", "NullTracer", "NULL", "BufferTracer",
+    "canonical_events", "trace_lines", "write_trace", "read_trace",
+    "to_chrome",
+    "Counter", "Gauge", "Histogram", "MetricsRegistry", "JsonlFlusher",
+    "annotate", "named_scope", "span",
+]

@@ -4,10 +4,10 @@ from .batcher import MicroBatcher, Ticket
 from .buckets import BucketCache, bucket_widths
 from .reload import CheckpointWatcher
 from .replay import ServicePolicy, ServiceSim
-from .service import DecisionService, ServeConfig
+from .service import DecisionResponse, DecisionService, ServeConfig
 
 __all__ = [
     "MicroBatcher", "Ticket", "BucketCache", "bucket_widths",
     "CheckpointWatcher", "ServicePolicy", "ServiceSim",
-    "DecisionService", "ServeConfig",
+    "DecisionResponse", "DecisionService", "ServeConfig",
 ]

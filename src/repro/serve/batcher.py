@@ -27,13 +27,20 @@ from typing import Any, Callable, Dict, List, Optional, Sequence
 
 
 class Ticket:
-    """A pending result; ``result()`` blocks until the batch resolves."""
+    """A pending result; ``result()`` blocks until the batch resolves.
 
-    __slots__ = ("payload", "enqueued_at", "_event", "_result", "_error")
+    After resolution ``meta`` carries per-request serving telemetry set
+    by the worker (``queue_wait_s`` — seconds from enqueue to batch
+    dispatch — and ``batch_size`` — how many requests shared the batch).
+    """
+
+    __slots__ = ("payload", "enqueued_at", "meta", "_event", "_result",
+                 "_error")
 
     def __init__(self, payload: Any):
         self.payload = payload
         self.enqueued_at = time.monotonic()
+        self.meta: Optional[Dict[str, Any]] = None
         self._event = threading.Event()
         self._result: Any = None
         self._error: Optional[BaseException] = None
@@ -61,12 +68,19 @@ class MicroBatcher:
     """Coalesce concurrent submissions into batched ``process`` calls."""
 
     def __init__(self, process: Callable[[List[Any]], Sequence[Any]],
-                 max_batch: int = 16, max_wait_s: float = 0.0):
+                 max_batch: int = 16, max_wait_s: float = 0.0,
+                 on_batch: Optional[Callable[[int, List[float], int],
+                                             None]] = None):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         if max_wait_s < 0:
             raise ValueError(f"max_wait_s must be >= 0, got {max_wait_s}")
         self._process = process
+        # Telemetry observer, called from the worker thread after every
+        # successful batch: on_batch(batch_size, per_request_waits_s,
+        # queue_depth_after_take).  Failures are swallowed so a broken
+        # metrics sink can never take serving down.
+        self._on_batch = on_batch
         self.max_batch = int(max_batch)
         self.max_wait_s = float(max_wait_s)
         self._lock = threading.Lock()
@@ -142,6 +156,8 @@ class MicroBatcher:
 
     def _loop(self) -> None:
         while (batch := self._take_batch()) is not None:
+            dispatched = time.monotonic()
+            waits = [max(0.0, dispatched - t.enqueued_at) for t in batch]
             try:
                 results = self._process([t.payload for t in batch])
                 if len(results) != len(batch):
@@ -157,8 +173,16 @@ class MicroBatcher:
                 self.requests += len(batch)
                 self.batch_hist[len(batch)] = \
                     self.batch_hist.get(len(batch), 0) + 1
-            for t, r in zip(batch, results):
+                depth = len(self._queue)
+            n = len(batch)
+            for t, r, w in zip(batch, results, waits):
+                t.meta = {"queue_wait_s": w, "batch_size": n}
                 t._resolve(r)
+            if self._on_batch is not None:
+                try:
+                    self._on_batch(n, waits, depth)
+                except Exception:
+                    pass
 
     # ------------------------------------------------------------ stats
     def stats(self) -> Dict[str, object]:

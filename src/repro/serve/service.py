@@ -41,6 +41,8 @@ from ..checkpoint import check_leaves_compat
 from ..core.dfp import greedy_actions_packed
 from ..core.encoding import (decision_row_dim, encode_decision_row,
                              pad_decision_rows)
+from ..obs.metrics import MetricsRegistry
+from ..obs.trace import NULL, Tracer
 from ..sim.simulator import SchedContext
 from .batcher import MicroBatcher, Ticket
 from .buckets import BucketCache
@@ -62,11 +64,36 @@ class ServeConfig:
     timeout_s: float = 120.0          # decide()/decide_many() wait bound
 
 
-class DecisionService:
-    """Micro-batched greedy DFP inference with hot-reloadable params."""
+@dataclass(frozen=True)
+class DecisionResponse:
+    """A decision plus its per-request serving telemetry.
 
-    def __init__(self, agent, config: ServeConfig = ServeConfig()):
+    ``queue_wait_s`` — seconds the request sat queued before its batch
+    dispatched; ``batch_size`` — how many requests shared the batch;
+    ``width`` — the padded bucket width the batch dispatched at.
+    """
+    action: int
+    queue_wait_s: float
+    batch_size: int
+    width: int
+
+
+class DecisionService:
+    """Micro-batched greedy DFP inference with hot-reloadable params.
+
+    ``registry`` (a ``repro.obs.MetricsRegistry``) receives serving
+    telemetry — request/batch/reload counters, queue-depth and
+    bucket-hit-rate gauges, batch-size and queue-wait histograms.
+    ``tracer`` receives ``serve.dispatch`` and ``ckpt.reload``
+    ``mrsch.trace/v1`` events.  Both default to no-ops.
+    """
+
+    def __init__(self, agent, config: ServeConfig = ServeConfig(), *,
+                 registry: Optional[MetricsRegistry] = None,
+                 tracer: Tracer = NULL):
         self.config = config
+        self.registry = registry
+        self.tracer = tracer
         self.enc = agent.enc
         self.dfp = agent.dfp
         self.n_actions = agent.config.window
@@ -77,7 +104,8 @@ class DecisionService:
         self._buckets = BucketCache(config.max_batch)
         self._batcher = MicroBatcher(self._process,
                                      max_batch=config.max_batch,
-                                     max_wait_s=config.max_wait_s)
+                                     max_wait_s=config.max_wait_s,
+                                     on_batch=self._on_batch)
         self._row_dim = decision_row_dim(self.enc, self.n_actions)
 
     # ------------------------------------------------------------ lifecycle
@@ -131,6 +159,19 @@ class DecisionService:
         """Blocking single decision (submit + wait)."""
         return self.submit(ctx, goal).result(self.config.timeout_s)
 
+    def decide_full(self, ctx: SchedContext,
+                    goal: Optional[np.ndarray] = None) -> DecisionResponse:
+        """Blocking decision carrying per-request serving telemetry."""
+        ticket = self.submit(ctx, goal)
+        action = int(ticket.result(self.config.timeout_s))
+        meta = ticket.meta or {}
+        batch_size = int(meta.get("batch_size", 1))
+        return DecisionResponse(
+            action=action,
+            queue_wait_s=float(meta.get("queue_wait_s", 0.0)),
+            batch_size=batch_size,
+            width=self._buckets.width_for(batch_size))
+
     def decide_many(self, ctxs: Sequence[SchedContext],
                     goals: Optional[Sequence] = None) -> np.ndarray:
         """Submit a group of requests, then wait for all of them."""
@@ -158,6 +199,26 @@ class DecisionService:
         self._buckets.record(packed.shape[0])
         acts = np.asarray(greedy_actions_packed(params, self.dfp, packed))
         return [int(x) for x in acts[:n]]
+
+    def _on_batch(self, n: int, waits: List[float], depth: int) -> None:
+        """Worker-thread telemetry hook (see MicroBatcher.on_batch)."""
+        width = self._buckets.width_for(n)
+        self.tracer.dispatch(n, width, max(waits) if waits else 0.0)
+        reg = self.registry
+        if reg is None:
+            return
+        reg.counter("serve_requests_total").inc(n)
+        reg.counter("serve_batches_total").inc()
+        reg.counter("serve_batch_rows_total", {"width": width}).inc(n)
+        reg.gauge("serve_queue_depth").set(depth)
+        reg.histogram("serve_batch_size",
+                      buckets=self._buckets.widths).observe(n)
+        wait_hist = reg.histogram("serve_queue_wait_seconds")
+        for w in waits:
+            wait_hist.observe(w)
+        b = self._buckets.stats()
+        hit = (b["bucket_hits"] / b["dispatches"]) if b["dispatches"] else 0.0
+        reg.gauge("serve_bucket_hit_rate").set(hit)
 
     # ------------------------------------------------------------ hot reload
     @property
@@ -189,6 +250,9 @@ class DecisionService:
             self._params = params            # atomic reference swap
             self._params_step = step
             self._reloads += 1
+        self.tracer.ckpt_reload(step if step is not None else -1)
+        if self.registry is not None:
+            self.registry.counter("serve_reloads_total").inc()
 
     # ------------------------------------------------------------ stats
     def stats(self) -> Dict[str, object]:

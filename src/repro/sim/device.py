@@ -62,6 +62,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..kernels.window_pack.ops import pack_window
+from ..obs.profiling import annotate
+from ..obs.trace import Tracer
 from .cluster import TTF_HORIZON, Cluster, ResourceSpec
 from .job import Job
 from .lifecycle import (FAILED, FINISHED, FaultSchedule, device_apply_drains,
@@ -163,6 +165,9 @@ class DeviceRollout:
     decided: np.ndarray              # (T, N) bool
     stats: DeviceStats
     obs: Optional[np.ndarray] = None  # (T, N, row_dim) packed decision rows
+    trace: Optional[Dict[str, np.ndarray]] = None  # rollout(trace=True):
+    #   per-round state deltas + decision extras, decoded into mrsch.trace
+    #   events by DeviceSimulator.emit_trace
     _build: Optional[Callable[[], List[SimResult]]] = field(
         default=None, repr=False)
     _cache: Optional[List[SimResult]] = field(default=None, repr=False)
@@ -520,9 +525,15 @@ def _build_obs_attention(layout: DeviceLayout, arrays, st, waiting,
 
 
 def _device_rollout(layout: DeviceLayout, score_fn, explore: bool,
-                    collect: bool, arrays, faults: DeviceFaults,
-                    policy_state, eps, key):
-    """The whole N-env x T-round rollout as one traced program."""
+                    collect: bool, trace: bool, arrays,
+                    faults: DeviceFaults, policy_state, eps, key):
+    """The whole N-env x T-round rollout as one traced program.
+
+    ``trace`` (static) additionally scans out per-round lifecycle deltas
+    and decision extras — tiny boolean/int arrays carried through the
+    scan so the hot loop stays device-resident — which
+    ``DeviceSimulator.emit_trace`` decodes post-run into the same
+    ``mrsch.trace/v1`` event stream the host engines emit inline."""
     N, J, R, W = (layout.n_envs, layout.n_jobs, layout.n_resources,
                   layout.window)
     P = arrays["deps_idx"].shape[2]
@@ -665,10 +676,17 @@ def _device_rollout(layout: DeviceLayout, score_fn, explore: bool,
         s = {**s, "in_pass": s["in_pass"] & ~reserve_env}
         a_out = jnp.where(need, a, -1)
         obs_out = obs if collect else jnp.zeros((N, 0), jnp.float32)
-        return s, a_out, need, obs_out
+        dec = ((j_star, fits, n_waiting.astype(jnp.int32)) if trace else ())
+        return s, a_out, need, obs_out, dec
 
     def round_body(s, _):
+        # Two-stage snapshots (pre-advance, post-advance): the deltas
+        # distinguish advance-phase transitions (finish / fail / requeue
+        # / drain / restore) from decide-phase starts, so a job killed
+        # and restarted at the SAME timestamp decodes as both events.
+        s_pre = s
         s = _advance_events(layout, arrays, faults, s)
+        s_adv = s
         # Single-pop advancement can leave an env in_pass with an empty
         # queue (completion-only timestamp) — only envs with waiting
         # jobs actually need a decision this round.
@@ -680,14 +698,34 @@ def _device_rollout(layout: DeviceLayout, score_fn, explore: bool,
             return decide(s)
 
         def idle(s):
+            dec = ((jnp.zeros(N, jnp.int32), jnp.zeros(N, bool),
+                    jnp.zeros(N, jnp.int32)) if trace else ())
             return (s, jnp.full(N, -1, jnp.int32), jnp.zeros(N, bool),
-                    jnp.zeros((N, obs_dim if collect else 0), jnp.float32))
+                    jnp.zeros((N, obs_dim if collect else 0), jnp.float32),
+                    dec)
 
-        s, a_out, need, obs_out = jax.lax.cond(any_need, live, idle, s)
-        return s, (a_out, need, obs_out)
+        s, a_out, need, obs_out, dec = jax.lax.cond(any_need, live, idle, s)
+        ys = (a_out, need, obs_out)
+        if trace:
+            tr = {"now": s_adv["now"],
+                  "finish_d": s_adv["finished"] & ~s_pre["finished"],
+                  "fail_d": s_adv["failed"] & ~s_pre["failed"],
+                  "requeue_d": s_adv["requeues"] > s_pre["requeues"],
+                  "start_d": s["started"] & ~s_adv["started"],
+                  "j_star": dec[0], "fit": dec[1], "qlen": dec[2]}
+            if D:
+                tr["drain_d"] = (s_adv["drain_done"]
+                                 & ~s_pre["drain_done"])
+                tr["restore_d"] = (s_adv["restore_done"]
+                                   & ~s_pre["restore_done"])
+            ys = ys + (tr,)
+        return s, ys
 
-    st, (actions, decided, obs_log) = jax.lax.scan(
-        round_body, st, None, length=layout.rounds)
+    st, scan_out = jax.lax.scan(round_body, st, None, length=layout.rounds)
+    if trace:
+        actions, decided, obs_log, trace_out = scan_out
+    else:
+        actions, decided, obs_log = scan_out
     out = {"started": st["started"], "start": st["start"], "end": st["end"],
            "finished": st["finished"], "failed": st["failed"],
            "requeues": st["requeues"], "failed_work": st["failed_work"],
@@ -699,6 +737,10 @@ def _device_rollout(layout: DeviceLayout, score_fn, explore: bool,
            "actions": actions, "decided": decided}
     if collect:
         out["obs"] = obs_log
+    if trace:
+        # Final READY times decode the first queue entry of every job
+        # (host: queued exactly at max(submit, parent end + think)).
+        out["trace"] = {**trace_out, "ready": st["ready"]}
     return out
 
 
@@ -787,7 +829,7 @@ class DeviceSimulator:
         self.arrays = self._pack(self.jobsets)
         self.faults_arrays = self._pack_faults(self._faults)
         self.stats = DeviceStats()
-        self._jitted: Dict[Tuple[bool, bool], object] = {}
+        self._jitted: Dict[Tuple[bool, bool, bool], object] = {}
 
     def _fault_rounds(self) -> int:
         """Extra scan rounds for fault activity, max over environments:
@@ -895,16 +937,16 @@ class DeviceSimulator:
             max_requeues=jnp.asarray(mr))
 
     # ------------------------------------------------------------- rollout
-    def _fn(self, explore: bool, collect: bool):
-        key = (explore, collect)
+    def _fn(self, explore: bool, collect: bool, trace: bool = False):
+        key = (explore, collect, trace)
         if key not in self._jitted:
             self._jitted[key] = jax.jit(functools.partial(
                 _device_rollout, self.layout, self.policy.score_window,
-                explore, collect))
+                explore, collect, trace))
         return self._jitted[key]
 
     def rollout(self, eps: Optional[float] = None, seed: int = 0,
-                collect: bool = False) -> DeviceRollout:
+                collect: bool = False, trace: bool = False) -> DeviceRollout:
         """Run every environment to completion in one device program.
 
         ``eps``: when set, actions are epsilon-greedy with in-graph
@@ -912,13 +954,20 @@ class DeviceSimulator:
         training exploration (note: a *different* RNG stream than the
         host engines' numpy draws).  ``collect=True`` additionally
         returns the packed decision rows for trainer ingestion.
+        ``trace=True`` (a separate jit specialization) scans out the
+        per-round lifecycle deltas that ``emit_trace`` decodes into the
+        ``mrsch.trace/v1`` event stream.
         """
         explore = eps is not None
-        out = self._fn(explore, collect)(
-            self.arrays, self.faults_arrays, self.policy.init_state(),
-            jnp.float32(0.0 if eps is None else eps),
-            jax.random.PRNGKey(seed))
-        out = {k: np.asarray(v) for k, v in out.items()}
+        with annotate("mrsch.device.rollout"):
+            raw = self._fn(explore, collect, trace)(
+                self.arrays, self.faults_arrays, self.policy.init_state(),
+                jnp.float32(0.0 if eps is None else eps),
+                jax.random.PRNGKey(seed))
+        tr = raw.pop("trace", None)
+        out = {k: np.asarray(v) for k, v in raw.items()}
+        if tr is not None:
+            tr = {k: np.asarray(v) for k, v in tr.items()}
         if not out["done"].all():
             raise RuntimeError(
                 f"device rollout exhausted its round budget "
@@ -931,8 +980,79 @@ class DeviceSimulator:
             max_batch=int(decided.sum(axis=1).max(initial=0)))
         return DeviceRollout(
             actions=out["actions"], decided=decided,
-            stats=self.stats, obs=out.get("obs"),
+            stats=self.stats, obs=out.get("obs"), trace=tr,
             _build=lambda: self._results(out))
+
+    def emit_trace(self, ro: DeviceRollout, tracer: Tracer,
+                   env_ids: Optional[Sequence[int]] = None) -> None:
+        """Decode a ``rollout(trace=True)`` into typed tracer events.
+
+        Emits the exact event stream the sequential engine produces for
+        the same jobsets/policy (canonical order restored by
+        ``repro.obs.trace.canonical_events``; byte parity pinned in
+        ``tests/test_obs.py`` on integer-time traces, where the f32
+        device clock is exact).
+        """
+        tr = ro.trace
+        if tr is None:
+            raise ValueError("rollout was not traced; pass trace=True")
+        lay = self.layout
+        eids = (list(range(lay.n_envs)) if env_ids is None
+                else [int(e) for e in env_ids])
+        if len(eids) != lay.n_envs:
+            raise ValueError(
+                f"got {len(eids)} env ids for {lay.n_envs} environments")
+        # First queue entry of every job: its final READY time (f32).
+        for i, js in enumerate(self.jobsets):
+            env, ready_i = eids[i], tr["ready"][i]
+            for j, job in enumerate(js):
+                if np.isfinite(ready_i[j]):
+                    tracer.job_queued(env, float(ready_i[j]), job.jid)
+        nreq = [[0] * len(js) for js in self.jobsets]
+        T = ro.decided.shape[0]
+        has_faults = "drain_d" in tr
+        for t in range(T):
+            for i, js in enumerate(self.jobsets):
+                env = eids[i]
+                now = float(tr["now"][t, i])
+                fin_d, fail_d = tr["finish_d"][t, i], tr["fail_d"][t, i]
+                req_d = tr["requeue_d"][t, i]
+                for j in np.flatnonzero(fin_d | fail_d | req_d):
+                    jid = js[j].jid
+                    if fin_d[j]:
+                        tracer.job_finish(env, now, jid)
+                    elif fail_d[j]:
+                        # The kill that crossed the requeue bound: the
+                        # host emits job.fail only (no requeue event).
+                        tracer.job_fail(env, now, jid)
+                    else:
+                        nreq[i][j] += 1
+                        tracer.job_requeue(env, now, jid, nreq[i][j])
+                        tracer.job_queued(env, now, jid)
+                if has_faults:
+                    for k in np.flatnonzero(tr["drain_d"][t, i]):
+                        d = self._faults[i].drains[k]
+                        tracer.drain(env, now, d.resource, d.units)
+                    for k in np.flatnonzero(tr["restore_d"][t, i]):
+                        d = self._faults[i].drains[k]
+                        tracer.restore(env, now, d.resource, d.units)
+                if not ro.decided[t, i]:
+                    continue
+                a = int(ro.actions[t, i])
+                j_star = int(tr["j_star"][t, i])
+                fit = bool(tr["fit"][t, i])
+                jid = js[j_star].jid
+                tracer.decision(env, now, a, jid, int(tr["qlen"][t, i]),
+                                1 if fit else 0)
+                if fit:
+                    tracer.job_start(env, now, jid, 0)
+                else:
+                    tracer.reserve(env, now, jid)
+                    if lay.backfill:
+                        bf = np.flatnonzero(tr["start_d"][t, i])
+                        for j in bf:   # ascending index == queue order
+                            tracer.job_start(env, now, js[j].jid, 1)
+                        tracer.backfill(env, now, len(bf))
 
     def run(self) -> List[SimResult]:
         """Greedy rollout; result contract matches the host engines."""

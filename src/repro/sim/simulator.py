@@ -35,6 +35,7 @@ from typing import Callable, Dict, List, Optional, Protocol, Sequence, Tuple
 
 import numpy as np
 
+from ..obs.trace import NULL, Tracer
 from .cluster import Cluster, ResourceSpec
 from .job import Job
 from .lifecycle import (ELIGIBLE, FaultSchedule, JobLifecycle, insert_queued)
@@ -145,7 +146,8 @@ class SimResult:
 class Simulator:
     def __init__(self, resources: Sequence[ResourceSpec], jobs: Sequence[Job],
                  policy, config: SimConfig | None = None, *,
-                 faults: Optional[FaultSchedule] = None):
+                 faults: Optional[FaultSchedule] = None,
+                 tracer: Tracer = NULL, env: int = 0):
         self.cluster = Cluster(list(resources))
         self.jobs = sorted((j.copy() for j in jobs), key=lambda j: (j.submit, j.jid))
         self.policy = policy
@@ -161,6 +163,11 @@ class Simulator:
         self._started = False
         self._in_pass = False     # inside a scheduling pass awaiting decisions
         self._pending_ctx: Optional[SchedContext] = None
+        # mrsch.trace/v1 emission (docs/observability.md).  The default
+        # NULL tracer keeps these paths allocation-free; ``env`` tags
+        # events when many simulators share one tracer (vector engine).
+        self.tracer = tracer
+        self.env = int(env)
 
     # ------------------------------------------------------------ event api
     def _push(self, time: float, kind: str, payload) -> None:
@@ -177,33 +184,49 @@ class Simulator:
 
     def _apply(self, kind: str, payload) -> None:
         lc = self.lifecycle
+        tr, env = self.tracer, self.env
         if kind == "submit":
             out, ready = lc.on_submit(payload, self.now)
             if out == "queued":
                 insert_queued(self.queue, payload)
+                tr.job_queued(env, self.now, payload.jid)
             elif out == "eligible":
                 self._push(ready, "release", payload)
         elif kind == "release":
             if lc.on_release(payload):
                 insert_queued(self.queue, payload)
+                tr.job_queued(env, self.now, payload.jid)
         elif kind == "end":
             jid, _attempt = payload
             job = lc.by_id[jid]
             out, released = lc.on_end(job, self.now)
             if out == "requeued":
                 insert_queued(self.queue, job)
+                tr.job_requeue(env, self.now, job.jid, job.requeues)
+                tr.job_queued(env, self.now, job.jid)
             else:
+                if out == "failed":
+                    tr.job_fail(env, self.now, job.jid)
+                else:
+                    tr.job_finish(env, self.now, job.jid)
                 for child, ready in released:
                     if ready <= self.now:
                         insert_queued(self.queue, child)
+                        tr.job_queued(env, self.now, child.jid)
                     else:
                         self._push(ready, "release", child)
         elif kind == "drain":
+            tr.drain(env, self.now, payload.resource, payload.units)
             for job, out in lc.on_drain(payload, self.now):
                 if out == "requeued":
                     insert_queued(self.queue, job)
+                    tr.job_requeue(env, self.now, job.jid, job.requeues)
+                    tr.job_queued(env, self.now, job.jid)
+                else:
+                    tr.job_fail(env, self.now, job.jid)
         else:  # "restore"
             lc.on_restore(payload)
+            tr.restore(env, self.now, payload.resource, payload.units)
 
     # ------------------------------------------------------------ re-entrant
     def start(self) -> None:
@@ -283,15 +306,21 @@ class Simulator:
         a = max(0, min(int(action), len(ctx.window) - 1))
         job = ctx.window[a]
         if self.cluster.fits(job):
+            self.tracer.decision(self.env, self.now, a, job.jid,
+                                 ctx.queue_len, 1)
             if hasattr(self.policy, "notify_started"):
                 self.policy.notify_started(job, ctx)
             self._start(job)
             return
         # First non-fitting selection: reserve it, then backfill.
+        self.tracer.decision(self.env, self.now, a, job.jid,
+                             ctx.queue_len, 0)
+        self.tracer.reserve(self.env, self.now, job.jid)
         if hasattr(self.policy, "notify_reserved"):
             self.policy.notify_reserved(job, ctx)
         if self.config.backfill:
-            self._easy_backfill(job)
+            n_bf = self._easy_backfill(job)
+            self.tracer.backfill(self.env, self.now, n_bf)
         self._in_pass = False
 
     def result(self) -> SimResult:
@@ -336,13 +365,14 @@ class Simulator:
             queue=self.queue,
         )
 
-    def _start(self, job: Job) -> None:
+    def _start(self, job: Job, bf: int = 0) -> None:
         end = self.lifecycle.start(job, self.now)
         self.queue.remove(job)
         self._push(end, "end", (job.jid, job.requeues))
         self.acc.job_started(job)
+        self.tracer.job_start(self.env, self.now, job.jid, bf)
 
-    def _easy_backfill(self, reserved: Job) -> None:
+    def _easy_backfill(self, reserved: Job) -> int:
         """EASY backfilling against a reservation for ``reserved``.
 
         A waiting job may jump ahead iff it fits now AND either (a) it is
@@ -353,7 +383,7 @@ class Simulator:
         """
         t_res = self.cluster.earliest_fit_time(reserved, self.now)
         if not np.isfinite(t_res):
-            return
+            return 0
         names = self.cluster.names
         # Free units at t_res assuming estimated releases and no backfill.
         free_at_res = {}
@@ -362,6 +392,7 @@ class Simulator:
             free_at_res[n] = int((rel <= t_res).sum())  # free now or released by t_res
         shadow = {n: free_at_res[n] - reserved.demands.get(n, 0) for n in names}
 
+        n_started = 0
         for job in list(self.queue):
             if job is reserved:
                 continue
@@ -373,7 +404,9 @@ class Simulator:
                 if not ends_before:
                     for n in names:
                         shadow[n] -= job.demands.get(n, 0)
-                self._start(job)
+                self._start(job, bf=1)
+                n_started += 1
+        return n_started
 
 
 def run_trace(resources, jobs, policy, window: int = 10,

@@ -35,6 +35,8 @@ from typing import Callable, List, Optional, Protocol, Sequence
 
 import numpy as np
 
+from ..obs.profiling import annotate
+from ..obs.trace import NULL, Tracer
 from .cluster import ResourceSpec
 from .job import Job
 from .lifecycle import FaultSchedule
@@ -103,15 +105,32 @@ class VectorSimulator:
                 f"got {len(faults)} fault schedules for {n} jobsets")
         return faults
 
+    @staticmethod
+    def _env_ids(env_ids, n: int):
+        if env_ids is None:
+            return list(range(n))
+        env_ids = [int(e) for e in env_ids]
+        if len(env_ids) != n:
+            raise ValueError(f"got {len(env_ids)} env ids for {n} jobsets")
+        return env_ids
+
     @classmethod
     def from_jobsets(cls, resources: Sequence[ResourceSpec],
                      jobsets: Sequence[Sequence[Job]], policy,
                      config: SimConfig | None = None, *,
-                     faults=None) -> "VectorSimulator":
-        """One environment per jobset, all sharing cluster spec and policy."""
+                     faults=None, tracer: Tracer = NULL,
+                     env_ids=None) -> "VectorSimulator":
+        """One environment per jobset, all sharing cluster spec and policy.
+
+        ``tracer`` is shared by every environment; ``env_ids`` (default
+        ``0..N-1``) tags each environment's events so one trace file can
+        hold a whole matrix run.
+        """
         flist = cls._fault_list(faults, len(jobsets))
-        sims = [Simulator(resources, jobs, policy, config, faults=f)
-                for jobs, f in zip(jobsets, flist)]
+        eids = cls._env_ids(env_ids, len(jobsets))
+        sims = [Simulator(resources, jobs, policy, config, faults=f,
+                          tracer=tracer, env=e)
+                for jobs, f, e in zip(jobsets, flist, eids)]
         return cls(sims, policy=policy)
 
     @classmethod
@@ -119,7 +138,8 @@ class VectorSimulator:
                      jobsets: Sequence[Sequence[Job]],
                      policy_factory: Callable[[], object],
                      config: SimConfig | None = None, *,
-                     faults=None) -> "VectorSimulator":
+                     faults=None, tracer: Tracer = NULL,
+                     env_ids=None) -> "VectorSimulator":
         """One FRESH policy instance per environment, lockstep preserved.
 
         For stateful sequential policies (``GAOptimizer``'s cached plan,
@@ -130,8 +150,10 @@ class VectorSimulator:
         matches the batched policies, so matrix cells stay comparable.
         """
         flist = cls._fault_list(faults, len(jobsets))
-        sims = [Simulator(resources, jobs, policy_factory(), config, faults=f)
-                for jobs, f in zip(jobsets, flist)]
+        eids = cls._env_ids(env_ids, len(jobsets))
+        sims = [Simulator(resources, jobs, policy_factory(), config, faults=f,
+                          tracer=tracer, env=e)
+                for jobs, f, e in zip(jobsets, flist, eids)]
         return cls(sims, policy=None)
 
     # ---------------------------------------------------------------- run
@@ -184,14 +206,15 @@ class VectorSimulator:
             if not live:
                 break
             ctxs = [pending[i] for i in live]
-            if self._slot_aware:
-                actions = np.asarray(self.policy.select_batch(ctxs,
-                                                              slots=live))
-            elif self._batched:
-                actions = np.asarray(self.policy.select_batch(ctxs))
-            else:
-                actions = [self.sims[i].policy.select(c)
-                           for i, c in zip(live, ctxs)]
+            with annotate("mrsch.vector.policy_select"):
+                if self._slot_aware:
+                    actions = np.asarray(self.policy.select_batch(
+                        ctxs, slots=live))
+                elif self._batched:
+                    actions = np.asarray(self.policy.select_batch(ctxs))
+                else:
+                    actions = [self.sims[i].policy.select(c)
+                               for i, c in zip(live, ctxs)]
             self.stats.policy_calls += 1 if self._batched else len(live)
             self.stats.decisions += len(live)
             self.stats.max_batch = max(self.stats.max_batch, len(live))

@@ -1,0 +1,309 @@
+"""Unified telemetry layer: engine trace parity (`mrsch.trace/v1`),
+canonical ordering, JSONL/Chrome round-trips, the metrics registry, and
+the trace_report CLI on a real matrix trace."""
+import importlib.util
+import json
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core import AgentConfig, EnvSlot, FCFSPolicy, MRSchAgent, \
+    TrainConfig, train_agent_vectorized
+from repro.eval import MatrixConfig, run_matrix
+from repro.obs import (NULL, BufferTracer, JsonlFlusher, MetricsRegistry,
+                       Tracer, canonical_events, read_trace, to_chrome,
+                       trace_lines, write_trace)
+from repro.sim import (DeviceSimulator, DrainEvent, FaultSchedule, Job,
+                       ResourceSpec, SimConfig, Simulator, VectorSimulator)
+from repro.workloads import ThetaConfig
+from repro.workloads.registry import build_jobs, register_swf
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def _load(name, rel):
+    spec = importlib.util.spec_from_file_location(name, REPO / rel)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+trace_report = _load("trace_report", "tools/trace_report.py")
+
+
+def synth_jobs(seed: int, n: int = 30):
+    rng = np.random.default_rng(seed)
+    jobs, t = [], 0.0
+    for i in range(n):
+        t += float(rng.exponential(40.0))
+        runtime = float(rng.uniform(20, 300))
+        jobs.append(Job(jid=i, submit=t, runtime=runtime,
+                        walltime=runtime * float(rng.uniform(1.0, 2.0)),
+                        demands={"node": int(rng.integers(1, 12)),
+                                 "bb": int(rng.integers(0, 6))}))
+    return jobs
+
+
+# -------------------------------------------------------------- parity
+def test_trace_parity_three_engines_swf():
+    """The acceptance pin: sequential, vector, and device engines emit
+    byte-identical canonical streams for the same SWF replay.  Integer
+    SWF timestamps avoid f32 chain-rounding divergence between the f64
+    host clocks and the f32 device clock."""
+    cfg = ThetaConfig.mini(seed=0, duration_days=0.4, jobs_per_day=110)
+    register_swf("obs-swf-test", str(REPO / "tests/data/sample.swf"),
+                 overwrite=True)
+    jobs = build_jobs("obs-swf-test", cfg, seed=1)
+    res = [ResourceSpec("node", cfg.n_nodes)]
+
+    t1 = BufferTracer()
+    Simulator(res, jobs, FCFSPolicy(), SimConfig.for_engine("sequential"),
+              tracer=t1).run()
+    t2 = BufferTracer()
+    VectorSimulator.from_jobsets(res, [jobs], FCFSPolicy(),
+                                 SimConfig.for_engine("vector"),
+                                 tracer=t2).run()
+    t3 = BufferTracer()
+    ds = DeviceSimulator(res, [jobs], FCFSPolicy(),
+                         SimConfig.for_engine("device"))
+    ds.emit_trace(ds.rollout(trace=True), t3)
+
+    assert len(t1.events) > 0
+    assert trace_lines(t1.events) == trace_lines(t2.events)
+    assert trace_lines(t1.events) == trace_lines(t3.events)
+
+
+def test_trace_parity_fault_path():
+    """Lifecycle events (requeue, fail, drain/restore, dependency
+    release) trace identically through the host and device engines."""
+    jobs = [
+        Job(jid=1, submit=0.0, runtime=100.0, walltime=200.0,
+            demands={"node": 4}),
+        Job(jid=2, submit=0.0, runtime=400.0, walltime=500.0,
+            demands={"node": 6}, fail_times=(50.0,)),
+        Job(jid=3, submit=10.0, runtime=300.0, walltime=400.0,
+            demands={"node": 8}),
+        Job(jid=4, submit=20.0, runtime=50.0, walltime=100.0,
+            demands={"node": 2}, deps=(1,), think_time=30.0),
+        Job(jid=5, submit=30.0, runtime=200.0, walltime=250.0,
+            demands={"node": 4},
+            fail_times=(20.0, 20.0, 20.0, 20.0, 20.0)),
+        Job(jid=6, submit=40.0, runtime=80.0, walltime=120.0,
+            demands={"node": 3}),
+    ]
+    faults = FaultSchedule(
+        drains=(DrainEvent(time=120.0, resource="node", units=6,
+                           duration=200.0),),
+        max_requeues=2)
+    res = [ResourceSpec("node", 12)]
+
+    t1 = BufferTracer()
+    Simulator(res, jobs, FCFSPolicy(), SimConfig.for_engine("sequential"),
+              faults=faults, tracer=t1).run()
+    t3 = BufferTracer()
+    ds = DeviceSimulator(res, [jobs], FCFSPolicy(),
+                         SimConfig.for_engine("device"), faults=faults)
+    ds.emit_trace(ds.rollout(trace=True), t3)
+
+    assert trace_lines(t1.events) == trace_lines(t3.events)
+    kinds = {}
+    for e in t1.events:
+        kinds[e["ev"]] = kinds.get(e["ev"], 0) + 1
+    # Every fault/workflow event kind shows up, with pinned counts.
+    assert kinds == {"job.queued": 10, "sched.decision": 17,
+                     "job.start": 10, "sched.reserve": 12,
+                     "sched.backfill": 12, "job.requeue": 4,
+                     "job.finish": 5, "fault.drain": 1,
+                     "fault.restore": 1, "job.fail": 1}
+
+
+def test_vector_interleaving_matches_two_sequential_sims():
+    """One shared tracer, two envs: the vector engine's round-robin
+    interleaving canonicalizes to the same stream as running each
+    simulator alone (float-time jobs — host engines share arithmetic)."""
+    res = [ResourceSpec("node", 16), ResourceSpec("bb", 8)]
+    jobs_a, jobs_b = synth_jobs(1), synth_jobs(2, n=20)
+
+    seq = BufferTracer()
+    cfg = SimConfig.for_engine("sequential")
+    Simulator(res, jobs_a, FCFSPolicy(), cfg, tracer=seq, env=0).run()
+    Simulator(res, jobs_b, FCFSPolicy(), cfg, tracer=seq, env=1).run()
+
+    vec = BufferTracer()
+    VectorSimulator.from_jobsets(res, [jobs_a, jobs_b], FCFSPolicy(),
+                                 SimConfig.for_engine("vector"),
+                                 tracer=vec).run()
+    assert trace_lines(seq.events) == trace_lines(vec.events)
+
+
+# ----------------------------------------------------- canonical order
+def test_canonical_order_groups_envs_and_appends_host_events():
+    tr = BufferTracer()
+    tr.span("warmup", 0.5)            # host event emitted FIRST
+    tr.job_queued(1, 5.0, 7)          # env 1 before env 0
+    tr.job_queued(0, 5.0, 3)
+    tr.job_finish(0, 5.0, 2)          # same (env, t): finish phase first
+    got = [(e["env"], e["ev"]) for e in canonical_events(tr.events)]
+    assert got == [(0, "job.finish"), (0, "job.queued"),
+                   (1, "job.queued"), (-1, "prof.span")]
+
+
+def test_null_tracer_accepts_every_emit():
+    assert NULL.enabled is False and isinstance(NULL, Tracer)
+    NULL.decision(0, 1.0, 2, 3, 4, 1)
+    NULL.job_start(0, 1.0, 3, bf=1)
+    NULL.drain(0, 1.0, "node", 4)
+    NULL.dispatch(4, 8, 0.001)
+    NULL.span("x", 0.1)
+
+
+# ------------------------------------------------------------ round-trip
+def test_write_read_roundtrip_and_header_validation(tmp_path):
+    tr = BufferTracer()
+    tr.meta["envs"] = {"0": {"policy": "FCFS", "scenario": "S1", "seed": 1}}
+    tr.job_queued(0, 1.0, 1)
+    tr.job_start(0, 2.0, 1)
+    tr.job_finish(0, 3.5, 1)
+    tr.span("phase", 0.25)
+    p = write_trace(tr.events, tmp_path / "t.jsonl", meta=tr.meta)
+    meta, events = read_trace(p)
+    assert meta == tr.meta
+    assert events == canonical_events(tr.events)
+    head = json.loads(p.read_text().splitlines()[0])
+    assert head["schema"] == "mrsch.trace/v1"
+
+    bad = tmp_path / "bad.jsonl"
+    bad.write_text('{"schema":"mrsch.trace/v999"}\n')
+    with pytest.raises(ValueError, match="mrsch.trace/v1"):
+        read_trace(bad)
+    empty = tmp_path / "empty.jsonl"
+    empty.write_text("")
+    with pytest.raises(ValueError, match="empty"):
+        read_trace(empty)
+
+
+def test_chrome_export_slices_and_instants():
+    tr = BufferTracer()
+    tr.job_queued(0, 0.0, 1)
+    tr.job_start(0, 1.0, 1)
+    tr.job_finish(0, 4.0, 1)
+    tr.job_start(0, 2.0, 2, bf=1)     # still running at trace end
+    tr.span("policy:FCFS", 0.5)
+    chrome = to_chrome(tr.events, meta={"k": "v"})
+    assert chrome["otherData"]["meta"] == {"k": "v"}
+    slices = [e for e in chrome["traceEvents"] if e["ph"] == "X"]
+    byname = {s["name"]: s for s in slices}
+    assert byname["job 1"]["dur"] == pytest.approx(3e6)
+    assert byname["job 1"]["args"]["outcome"] == "job.finish"
+    assert byname["job 2"]["args"] == {"backfilled": 1,
+                                       "outcome": "running"}
+    assert byname["policy:FCFS"]["pid"] == -1
+    instants = {e["name"] for e in chrome["traceEvents"] if e["ph"] == "i"}
+    assert "job.queued" in instants
+
+
+# ------------------------------------------------------------- metrics
+def test_registry_counters_gauges_histograms():
+    reg = MetricsRegistry()
+    reg.counter("serve_requests_total").inc(3)
+    reg.counter("serve_requests_total").inc()
+    with pytest.raises(ValueError, match="only go up"):
+        reg.counter("serve_requests_total").inc(-1)
+    reg.gauge("train_loss").set(0.25)
+    reg.gauge("train_loss", labels={"lane": "a"}).set(0.5)
+    h = reg.histogram("serve_queue_wait_seconds")
+    for v in (0.002, 0.02, 0.2):
+        h.observe(v)
+    with pytest.raises(ValueError, match="already registered"):
+        reg.gauge("serve_requests_total")
+
+    snap = reg.snapshot()
+    assert snap["serve_requests_total"][""] == 4.0
+    assert snap["train_loss"][""] == 0.25
+    assert snap["train_loss"]['{lane="a"}'] == 0.5
+    hs = snap["serve_queue_wait_seconds"][""]
+    assert hs["count"] == 3 and hs["min"] == 0.002 and hs["max"] == 0.2
+
+    text = reg.to_prometheus()
+    assert "# TYPE mrsch_serve_requests_total counter" in text
+    assert "mrsch_serve_requests_total 4" in text
+    assert 'mrsch_train_loss{lane="a"} 0.5' in text
+    # Cumulative buckets: every le >= 0.2 saw all three observations.
+    assert 'mrsch_serve_queue_wait_seconds_bucket{le="+Inf"} 3' in text
+    assert "mrsch_serve_queue_wait_seconds_count 3" in text
+
+
+def test_jsonl_flusher_appends_snapshots(tmp_path):
+    reg = MetricsRegistry()
+    reg.counter("train_episodes_total").inc()
+    fl = JsonlFlusher(reg, tmp_path / "metrics.jsonl", interval_s=3600)
+    fl.flush()
+    reg.counter("train_episodes_total").inc()
+    with fl:                         # start/stop does a final flush
+        pass
+    lines = [json.loads(ln) for ln in
+             (tmp_path / "metrics.jsonl").read_text().splitlines()]
+    assert len(lines) == 2
+    assert lines[0]["metrics"]["train_episodes_total"][""] == 1.0
+    assert lines[1]["metrics"]["train_episodes_total"][""] == 2.0
+    assert all("ts" in ln for ln in lines)
+
+
+# ----------------------------------------------------- train registry
+@pytest.mark.slow
+def test_vectorized_trainer_fills_registry():
+    res = [ResourceSpec("node", 16), ResourceSpec("bb", 8)]
+    agent = MRSchAgent(res, AgentConfig(
+        state_hidden=(32, 16), state_out=8, module_hidden=4,
+        stream_hidden=16, batch_size=16, grad_steps_per_episode=4,
+        eps_decay=0.9, seed=0))
+    slots = [EnvSlot(jobsets=[("a", synth_jobs(1, n=40))],
+                     resources=res, tag="lane-a")]
+    reg = MetricsRegistry()
+    train_agent_vectorized(agent, slots, TrainConfig(n_envs=1),
+                           registry=reg)
+    snap = reg.snapshot()
+    assert snap["train_episodes_total"]['{lane="lane-a"}'] == 1.0
+    assert snap["train_decisions_total"]['{lane="lane-a"}'] >= 40
+    assert np.isfinite(snap["train_loss"][""])
+    assert snap["train_grad_norm"][""] > 0.0
+    assert 0.0 < snap["train_epsilon"][""] <= 1.0
+    assert snap["train_decisions_per_sec"][""] > 0.0
+    assert snap["train_episode_loss"][""]["count"] == 1
+
+
+# --------------------------------------------------------- trace_report
+def test_trace_report_roundtrips_matrix_trace(tmp_path):
+    """End-to-end: run_matrix with a recording tracer -> write -> read
+    -> build_report attributes decisions back to each policy."""
+    cfg = ThetaConfig.mini(seed=0, duration_days=0.4, jobs_per_day=110)
+    res = cfg.resources()
+    tracer = BufferTracer()
+    matrix = run_matrix({"FCFS": FCFSPolicy}, res, cfg,
+                        MatrixConfig(scenarios=("S2",), seeds=(1,),
+                                     vector=4),
+                        tracer=tracer)
+    assert matrix["summary"]["n_cells"] == 1
+    assert tracer.meta["envs"]["0"] == {"policy": "FCFS",
+                                        "scenario": "S2", "seed": 1}
+    path = write_trace(tracer.events, tmp_path / "matrix_trace.jsonl",
+                       meta=tracer.meta)
+
+    meta, events = read_trace(path)
+    report = trace_report.build_report(meta, events)
+    assert report["schema"] == "mrsch.trace/v1"
+    assert report["n_events"] == len(events) > 0
+    assert report["counts"]["sched.decision"] > 0
+    assert "policy:FCFS" in report["spans"]
+    pol = report["policies"]["FCFS"]
+    decisions = sum(1 for e in events if e["ev"] == "sched.decision")
+    assert pol["decisions"] == decisions
+    assert pol["ms_per_decision"] >= 0.0
+
+    chrome_path = tmp_path / "trace_chrome.json"
+    assert trace_report.main([str(path), "--chrome",
+                              str(chrome_path)]) == 0
+    chrome = json.loads(chrome_path.read_text())
+    assert chrome["traceEvents"]
+    assert trace_report.main([str(tmp_path / "missing.jsonl")]) == 2

@@ -8,8 +8,10 @@ import pytest
 from repro.checkpoint import CheckpointManager
 from repro.core import AgentConfig, MRSchAgent
 from repro.core.dfp import greedy_action
-from repro.serve import (BucketCache, CheckpointWatcher, DecisionService,
-                         MicroBatcher, ServeConfig, ServiceSim, bucket_widths)
+from repro.obs import BufferTracer, MetricsRegistry
+from repro.serve import (BucketCache, CheckpointWatcher, DecisionResponse,
+                         DecisionService, MicroBatcher, ServeConfig,
+                         ServiceSim, bucket_widths)
 from repro.sim import (Job, ResourceSpec, Simulator, run_trace, run_traces,
                        sim_config)
 
@@ -376,3 +378,62 @@ def test_decide_many_rejects_mismatched_goals():
     with DecisionService(agent, ServeConfig(max_batch=4)) as svc:
         with pytest.raises(ValueError, match="decide_many"):
             svc.decide_many(ctxs, goals=[None] * (len(ctxs) - 1))
+
+
+# ------------------------------------------------------------ telemetry
+def test_decide_full_carries_per_request_telemetry():
+    """Every response reports how long the request queued, how many
+    requests shared its batch, and the padded width it dispatched at —
+    with the action identical to the plain decide() path."""
+    agent = small_agent()
+    ctxs = harvest_contexts(agent, n_envs=4)
+    with DecisionService(agent, ServeConfig(max_batch=4)) as svc:
+        plain = [svc.decide(c) for c in ctxs]
+        full = [svc.decide_full(c) for c in ctxs]
+        widths = set(bucket_widths(svc.config.max_batch))
+        for resp, action in zip(full, plain):
+            assert isinstance(resp, DecisionResponse)
+            assert resp.action == action
+            assert resp.queue_wait_s >= 0.0
+            assert 1 <= resp.batch_size <= svc.config.max_batch
+            assert resp.width in widths
+            assert resp.width >= resp.batch_size
+
+
+def test_ticket_meta_populated_after_resolution():
+    agent = small_agent()
+    ctx = harvest_contexts(agent)[0]
+    with DecisionService(agent, ServeConfig(max_batch=4)) as svc:
+        ticket = svc.submit(ctx)
+        ticket.result(10.0)
+        assert set(ticket.meta) == {"queue_wait_s", "batch_size"}
+        assert ticket.meta["queue_wait_s"] >= 0.0
+        assert ticket.meta["batch_size"] >= 1
+
+
+def test_service_registry_and_tracer_wiring():
+    """The service fills its metrics registry and emits serve.dispatch /
+    ckpt.reload host events when given a recording tracer."""
+    agent, other = small_agent(), small_agent(seed=3)
+    ctxs = harvest_contexts(agent, n_envs=4)
+    reg, tracer = MetricsRegistry(), BufferTracer()
+    with DecisionService(agent, ServeConfig(max_batch=4),
+                         registry=reg, tracer=tracer) as svc:
+        for c in ctxs:
+            svc.decide(c)
+        svc.update_params(other.params, step=5)
+    snap = reg.snapshot()
+    assert sum(snap["serve_requests_total"].values()) >= len(ctxs)
+    assert sum(snap["serve_batches_total"].values()) >= 1
+    assert snap["serve_reloads_total"][""] == 1.0
+    assert sum(v for v in snap["serve_batch_rows_total"].values()) \
+        >= len(ctxs)
+    assert 0.0 <= snap["serve_bucket_hit_rate"][""] <= 1.0
+    assert snap["serve_queue_wait_seconds"][""]["count"] >= len(ctxs)
+
+    dispatches = [e for e in tracer.events if e["ev"] == "serve.dispatch"]
+    assert dispatches and all(e["env"] == -1 and e["wait_s"] >= 0.0
+                              and e["width"] >= e["n"]
+                              for e in dispatches)
+    reloads = [e for e in tracer.events if e["ev"] == "ckpt.reload"]
+    assert [e["step"] for e in reloads] == [5]

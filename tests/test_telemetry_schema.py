@@ -1,0 +1,98 @@
+"""Row-schema stability: ScheduleMetrics.as_row / CSV column order and
+the prefix-compat contract committed baselines rely on (older baselines
+without the lifecycle columns must still gate newer results)."""
+import dataclasses
+import importlib.util
+import json
+from pathlib import Path
+
+from repro.eval import matrix_columns, matrix_csv
+from repro.eval.matrix import CORE_COLUMNS, METRIC_COLUMNS
+from repro.sim import ResourceSpec
+from repro.sim.metrics import ScheduleMetrics
+
+REPO = Path(__file__).resolve().parent.parent
+
+LIFECYCLE_COLUMNS = ("requeues", "n_failed", "failed_node_hours",
+                     "completed_work_frac", "pipeline_makespan")
+
+RES = [ResourceSpec("node", 16), ResourceSpec("bb", 8)]
+
+
+def _load(name, rel):
+    spec = importlib.util.spec_from_file_location(name, REPO / rel)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+check_bench = _load("check_bench_schema", "tools/check_bench.py")
+
+
+def sample_metrics() -> ScheduleMetrics:
+    return ScheduleMetrics(
+        utilization={"node": 0.5, "bb": 0.25}, avg_wait=10.0,
+        avg_slowdown=1.5, avg_bounded_slowdown=1.2, p95_wait=30.0,
+        max_wait=60.0, n_jobs=40, makespan=1000.0, truncated_jobs=2,
+        requeues=3, n_failed=1, failed_node_hours=12.5,
+        completed_work_frac=0.9, pipeline_makespan=800.0)
+
+
+def test_as_row_key_order_matches_matrix_schema():
+    row = sample_metrics().as_row()
+    assert list(row) == ["util_node", "util_bb"] + list(METRIC_COLUMNS)
+
+
+def test_as_row_drops_no_dataclass_field():
+    m = sample_metrics()
+    row = m.as_row()
+    scalar = {f.name for f in dataclasses.fields(ScheduleMetrics)
+              if f.name != "utilization"}
+    assert scalar == set(METRIC_COLUMNS) <= set(row)
+    for name in m.utilization:
+        assert row[f"util_{name}"] == m.utilization[name]
+
+
+def test_matrix_columns_order_and_lifecycle_tail():
+    cols = matrix_columns(RES)
+    assert cols[:len(CORE_COLUMNS)] == list(CORE_COLUMNS)
+    assert cols[len(CORE_COLUMNS):len(CORE_COLUMNS) + 2] \
+        == ["util_node", "util_bb"]
+    # The five lifecycle columns were appended LAST so pre-lifecycle
+    # baselines keep prefix-comparing.
+    assert cols[-5:] == list(LIFECYCLE_COLUMNS)
+
+
+def test_csv_header_and_cell_order_follow_columns():
+    cols = matrix_columns(RES)
+    row = {"policy": "FCFS", "scenario": "S2", "family": "paper",
+           "drift": False, "seed": 1, "decisions": 7, "n_unstarted": 0}
+    row.update({c: i for i, c in enumerate(cols[len(CORE_COLUMNS):])})
+    csv = matrix_csv({"columns": cols, "rows": [row]})
+    lines = csv.splitlines()
+    assert lines[0] == ",".join(cols)
+    assert lines[1].split(",") == [str(row[c]) for c in cols]
+
+
+def test_pre_lifecycle_baseline_prefix_compares():
+    """check_bench's list rule: a baseline columns array shorter than
+    the result's gates only the shared prefix — an old baseline still
+    accepts rows that grew the lifecycle tail, but a result that LOST
+    columns (or reordered them) fails."""
+    cols = matrix_columns(RES)
+    old = {"columns": cols[:-5]}
+    assert check_bench.compare({"columns": cols}, old, rtol=0.0) == []
+    # result truncated below the baseline contract -> violation
+    assert check_bench.compare(old, {"columns": cols}, rtol=0.0)
+    # reordering inside the shared prefix -> violation
+    swapped = cols[:-5]
+    swapped[0], swapped[1] = swapped[1], swapped[0]
+    assert check_bench.compare({"columns": swapped}, old, rtol=0.0)
+
+
+def test_committed_matrix_baseline_matches_current_schema():
+    base = json.loads(
+        (REPO / "benchmarks/baselines/matrix.json").read_text())
+    res = [ResourceSpec(n, 1) for n in base["config"]["resources"]]
+    assert base["columns"] == matrix_columns(res)
+    assert base["columns"][-5:] == list(LIFECYCLE_COLUMNS)

@@ -20,8 +20,8 @@ Numeric comparison is direction-aware by key name:
 * lower-is-better (``*_us``, ``*_ms``, ``*seconds*``, ``*latency*``,
   ``*wait*``, ``*slowdown*``, ``*loss*``, ``*makespan*`` incl. the
   workflow pipeline makespan, ``*requeues*``, ``*n_failed*``,
-  ``failed_*`` node-hours): only a *rise* above ``base * (1 + rtol)``
-  fails;
+  ``failed_*`` node-hours, ``*overhead*`` e.g. the telemetry-off tracer
+  overhead): only a *rise* above ``base * (1 + rtol)`` fails;
 * anything else: two-sided relative error > rtol fails.
 
 Per-section tolerance overrides: a baseline may carry a top-level
@@ -55,7 +55,7 @@ from typing import Any, Dict, List, Mapping, Optional
 HIGHER_IS_BETTER = ("speedup", "per_sec", "throughput", "util_", "_frac")
 LOWER_IS_BETTER = ("_us", "_ms", "seconds", "latency", "wait",
                    "slowdown", "loss", "makespan", "requeues",
-                   "n_failed", "failed_")
+                   "n_failed", "failed_", "overhead")
 
 GATES_KEY = "__gates__"
 

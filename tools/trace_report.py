@@ -1,0 +1,164 @@
+#!/usr/bin/env python3
+"""Summarize a ``mrsch.trace/v1`` JSONL trace into readable tables.
+
+    python tools/trace_report.py TRACE.jsonl [--chrome OUT.json] [--json]
+
+Sections:
+
+* run metadata (from the trace header);
+* event counts per kind;
+* per-phase / per-kernel wall-clock table aggregated from ``prof.span``
+  events (count, total seconds, mean milliseconds);
+* per-policy decision latency: ``policy:<name>`` spans (emitted by
+  ``repro.eval.matrix.run_matrix``) divided by that policy's
+  ``sched.decision`` count via the header's ``envs`` map;
+* job lifecycle + serving summary (starts/finishes/fails/requeues,
+  backfill share, dispatch batches and queue waits).
+
+``--chrome`` additionally writes a Chrome-trace (Perfetto-loadable)
+JSON of the same events; ``--json`` prints the machine-readable report
+instead of the tables.  Exit 2 on unreadable/invalid input.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import Dict, List, Sequence
+
+REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "src"))
+
+from repro.obs.trace import read_trace, to_chrome  # noqa: E402
+
+
+def _fmt_table(headers: Sequence[str], rows: Sequence[Sequence]) -> str:
+    cells = [[str(c) for c in r] for r in rows]
+    widths = [max(len(h), *(len(r[i]) for r in cells)) if cells else len(h)
+              for i, h in enumerate(headers)]
+    def line(parts):
+        return "  ".join(p.ljust(w) for p, w in zip(parts, widths)).rstrip()
+    out = [line(headers), line(["-" * w for w in widths])]
+    out += [line(r) for r in cells]
+    return "\n".join(out)
+
+
+def build_report(meta: Dict, events: List[Dict]) -> Dict:
+    """Aggregate a trace into the report dict the CLI renders."""
+    counts: Dict[str, int] = {}
+    spans: Dict[str, Dict[str, float]] = {}
+    starts = bf_starts = 0
+    dispatch = {"batches": 0, "requests": 0, "max_wait_s": 0.0}
+    env_decisions: Dict[int, int] = {}
+    for e in events:
+        ev = e["ev"]
+        counts[ev] = counts.get(ev, 0) + 1
+        if ev == "prof.span":
+            s = spans.setdefault(e["name"], {"count": 0, "total_s": 0.0})
+            s["count"] += 1
+            s["total_s"] += e["dur_s"]
+        elif ev == "job.start":
+            starts += 1
+            bf_starts += e.get("bf", 0)
+        elif ev == "sched.decision":
+            env_decisions[e["env"]] = env_decisions.get(e["env"], 0) + 1
+        elif ev == "serve.dispatch":
+            dispatch["batches"] += 1
+            dispatch["requests"] += e["n"]
+            dispatch["max_wait_s"] = max(dispatch["max_wait_s"], e["wait_s"])
+    for s in spans.values():
+        s["total_s"] = round(s["total_s"], 6)
+        s["mean_ms"] = round(1e3 * s["total_s"] / s["count"], 3)
+
+    # Per-policy decision latency: policy:<name> span time over that
+    # policy's decision count (envs map: env id -> {policy, ...}).
+    envs = meta.get("envs", {})
+    per_policy: Dict[str, Dict[str, float]] = {}
+    for env, n in sorted(env_decisions.items()):
+        policy = envs.get(str(env), {}).get("policy", f"env{env}")
+        row = per_policy.setdefault(policy, {"decisions": 0, "span_s": 0.0})
+        row["decisions"] += n
+    for name, row in per_policy.items():
+        span = spans.get(f"policy:{name}")
+        if span:
+            row["span_s"] = span["total_s"]
+            row["ms_per_decision"] = round(
+                1e3 * span["total_s"] / max(row["decisions"], 1), 4)
+
+    return {
+        "schema": "mrsch.trace/v1",
+        "meta": meta,
+        "n_events": len(events),
+        "counts": dict(sorted(counts.items())),
+        "spans": dict(sorted(spans.items())),
+        "policies": dict(sorted(per_policy.items())),
+        "jobs": {
+            "starts": starts,
+            "backfilled": bf_starts,
+            "backfill_share": round(bf_starts / starts, 4) if starts else 0.0,
+            "finished": counts.get("job.finish", 0),
+            "failed": counts.get("job.fail", 0),
+            "requeues": counts.get("job.requeue", 0),
+        },
+        "serving": dispatch,
+    }
+
+
+def render(rep: Dict) -> str:
+    out = [f"mrsch.trace/v1 report — {rep['n_events']} events"]
+    meta = {k: v for k, v in rep["meta"].items() if k != "envs"}
+    if meta:
+        out.append("meta: " + json.dumps(meta, sort_keys=True))
+    if "envs" in rep["meta"]:
+        out.append(f"envs: {len(rep['meta']['envs'])} mapped")
+    out += ["", "Event counts", _fmt_table(
+        ("event", "count"), sorted(rep["counts"].items()))]
+    if rep["spans"]:
+        out += ["", "Phases / kernels (prof.span)", _fmt_table(
+            ("span", "count", "total_s", "mean_ms"),
+            [(n, s["count"], s["total_s"], s["mean_ms"])
+             for n, s in rep["spans"].items()])]
+    if rep["policies"]:
+        out += ["", "Per-policy decision latency", _fmt_table(
+            ("policy", "decisions", "span_s", "ms_per_decision"),
+            [(n, r["decisions"], r.get("span_s", "-"),
+              r.get("ms_per_decision", "-"))
+             for n, r in rep["policies"].items()])]
+    j = rep["jobs"]
+    out += ["", "Jobs: "
+            f"{j['starts']} starts ({j['backfilled']} backfilled, "
+            f"share {j['backfill_share']}), {j['finished']} finished, "
+            f"{j['failed']} failed, {j['requeues']} requeues"]
+    s = rep["serving"]
+    if s["batches"]:
+        out.append(f"Serving: {s['requests']} requests in {s['batches']} "
+                   f"batches, max queue wait {s['max_wait_s']}s")
+    return "\n".join(out)
+
+
+def main(argv: Sequence[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("trace", help="mrsch.trace/v1 JSONL file")
+    ap.add_argument("--chrome", metavar="OUT",
+                    help="also write a Chrome-trace JSON (Perfetto)")
+    ap.add_argument("--json", action="store_true",
+                    help="print the machine-readable report")
+    args = ap.parse_args(argv)
+    try:
+        meta, events = read_trace(args.trace)
+    except (OSError, ValueError, json.JSONDecodeError) as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+    rep = build_report(meta, events)
+    if args.chrome:
+        Path(args.chrome).write_text(
+            json.dumps(to_chrome(events, meta)), encoding="utf-8")
+        print(f"wrote chrome trace: {args.chrome}", file=sys.stderr)
+    print(json.dumps(rep, indent=1, sort_keys=True) if args.json
+          else render(rep))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
